@@ -1,0 +1,54 @@
+"""Paper §3.2 — communication complexity.
+
+Analytic accounting (2·2M/K vs 2·2M per agent per step) for every assigned
+architecture, cross-checked against the loop-aware HLO collective audit of
+the dry-run artifacts when present (agent-axis bytes only — tensor-parallel
+ICI traffic within an agent is orthogonal to the paper's claim).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config, list_archs
+from repro.models.adversarial import AdversarialLM
+
+
+def bench_analytic(K=20):
+    for arch in list_archs():
+        cfg = get_config(arch).smoke()  # param ratio is scale-free; use smoke
+        model = AdversarialLM(cfg)
+        params = jax.eval_shape(model.init, jax.random.key(0))
+        M = sum(l.size * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(params))
+        fed_per_step = 2 * M / K
+        dist_per_step = 2 * M
+        emit(f"comm_{arch}", 0.0,
+             f"M_bytes={M};fedgan_B_per_step={fed_per_step:.0f};"
+             f"distributed_B_per_step={dist_per_step:.0f};ratio={K}")
+
+
+def bench_hlo_audit(results_dir="results/dryrun"):
+    """Agent-axis collective bytes per step from the compiled dry-runs."""
+    for path in sorted(glob.glob(os.path.join(results_dir, "*train_4k*16x16.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        ax = rec["collective_by_axis"]
+        steps = rec.get("steps_per_call", 1)
+        emit(f"comm_hlo_{rec['arch']}_{rec.get('mode','fedgan')}", 0.0,
+             f"agent_axis_B_per_step={ax.get('agent',0)/steps:.0f};"
+             f"model_axis_B_per_step={ax.get('model',0)/steps:.0f}")
+
+
+def main():
+    bench_analytic()
+    bench_hlo_audit()
+
+
+if __name__ == "__main__":
+    main()

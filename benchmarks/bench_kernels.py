@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs pure-jnp oracle.
+
+NOTE: on this CPU container ``us_per_call`` measures the interpret-mode
+Python execution, NOT TPU performance — the derived column carries the
+max-abs error vs the oracle, which is the portable signal.  The XLA-path
+timings (oracle under jit) are the meaningful CPU numbers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels.fedavg.ops import fedavg_tree
+from repro.kernels.fedavg.ref import fedavg_flat_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def bench_fedavg():
+    w = jax.random.dirichlet(jax.random.key(0), jnp.ones(16))
+    x = jax.random.normal(jax.random.key(1), (16, 1 << 18))
+    ref = jax.jit(fedavg_flat_ref)
+    _, us_ref = timed(ref, w, x)
+    got = fedavg_tree(w, {"x": x}, interpret=True)["x"]
+    err = float(jnp.max(jnp.abs(got - ref(w, x))))
+    emit("kernel_fedavg_ref_xla", us_ref, f"n=16x262144")
+    emit("kernel_fedavg_interpret", 0.0, f"max_err={err:.2e}")
+
+
+def bench_flash():
+    q = jax.random.normal(jax.random.key(0), (2, 512, 8, 64))
+    k = jax.random.normal(jax.random.key(1), (2, 512, 2, 64))
+    v = jax.random.normal(jax.random.key(2), (2, 512, 2, 64))
+    ref = jax.jit(lambda q, k, v: jnp.swapaxes(attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True, window=128), 1, 2))
+    want, us_ref = timed(ref, q, k, v)
+    got = flash_attention(q, k, v, causal=True, window=128, interpret=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    emit("kernel_flash_ref_xla", us_ref, "T=512,h=8,kv=2,w=128")
+    emit("kernel_flash_interpret", 0.0, f"max_err={err:.2e}")
+
+
+def bench_ssd():
+    x = 0.5 * jax.random.normal(jax.random.key(0), (2, 512, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(1), (2, 512, 8)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(2), (8,)))
+    B = 0.5 * jax.random.normal(jax.random.key(3), (2, 512, 32))
+    C = 0.5 * jax.random.normal(jax.random.key(4), (2, 512, 32))
+    ref = jax.jit(lambda *a: ssd_ref(*a, chunk=128))
+    want, us_ref = timed(ref, x, dt, A, B, C)
+    got = ssd(x, dt, A, B, C, chunk=128, interpret=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    emit("kernel_ssd_ref_xla", us_ref, "T=512,nh=8,ds=32,Q=128")
+    emit("kernel_ssd_interpret", 0.0, f"max_err={err:.2e}")
+
+
+def main():
+    bench_fedavg()
+    bench_flash()
+    bench_ssd()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Deliverable (g) — roofline table from the dry-run artifacts.
+
+For each (arch x shape x mesh): the three roofline terms (compute / memory /
+collective seconds per step, v5e constants), the dominant term, MODEL_FLOPS
+(6·N·D dense, 6·N_active·D MoE) vs compiled HLO FLOPs (useful-compute
+ratio), and HBM occupancy per device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models.adversarial import AdversarialLM
+from repro.models.transformer import Backbone
+
+
+def active_param_count(arch: str) -> tuple[int, int]:
+    """(total params N, active params N_active) for the GENERATOR."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(Backbone(cfg).init, jax.random.key(0))
+    total = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    if cfg.num_experts:
+        # expert weights: stacked (layers, E, ...) under blocks/mlp/experts
+        def expert_size(tree, path=""):
+            total = 0
+            if isinstance(tree, dict):
+                for k, v in tree.items():
+                    total += expert_size(v, path + "/" + k)
+                return total
+            return tree.size if "/experts/" in path + "/" else 0
+        e_total = expert_size(params)
+        active = total - e_total + e_total * cfg.experts_per_token // cfg.num_experts
+        return total, active
+    return total, total
+
+
+def model_flops_per_step(arch: str, shape_rec: dict) -> float:
+    """6·N_active·tokens for train; 2·N_active·tokens for inference."""
+    _, n_active = active_param_count(arch)
+    meta = shape_rec.get("meta", {})
+    kind = meta.get("kind", "train")
+    if kind == "train":
+        tokens = meta.get("agents", 16) * meta.get("per_agent_batch", 16) * 4096
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        from repro.models.config import SHAPES
+        s = SHAPES[shape_rec["shape"]]
+        return 2.0 * n_active * s.seq_len * s.global_batch
+    # decode: one token per sequence
+    from repro.models.config import SHAPES
+    s = SHAPES[shape_rec["shape"]]
+    return 2.0 * n_active * s.global_batch
+
+
+def main(results_dir="results/dryrun", tag="baseline"):
+    rows = sorted(glob.glob(os.path.join(results_dir, f"{tag}__*.json")))
+    if not rows:
+        emit("roofline", 0.0, f"no dry-run artifacts under {results_dir}")
+        return
+    chips = {"16x16": 256, "2x16x16": 512}
+    for path in rows:
+        rec = json.load(open(path))
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{rec.get('mesh','16x16')}"
+        if rec.get("status") == "skipped":
+            emit(name, 0.0, f"SKIP:{rec.get('reason','')}")
+            continue
+        if rec.get("status") != "ok":
+            emit(name, 0.0, f"ERROR:{rec.get('error','')[:80]}")
+            continue
+        r = rec["roofline_per_step"]
+        n_chips = chips.get(rec.get("mesh", "16x16"), 256)
+        mf = model_flops_per_step(rec["arch"], rec)
+        hlo_flops_fleet = rec["flops"] / rec.get("steps_per_call", 1) * n_chips
+        useful = mf / hlo_flops_fleet if hlo_flops_fleet else 0.0
+        hbm = rec["memory"]["total_hbm_bytes"] / 2 ** 30
+        emit(name, 0.0,
+             f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+             f"collective_s={r['collective_s']:.3e};dominant={r['dominant']};"
+             f"useful_flops_ratio={useful:.2f};hbm_GiB_per_dev={hbm:.2f}")
+
+
+if __name__ == "__main__":
+    main()

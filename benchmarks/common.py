@@ -1,0 +1,27 @@
+"""Shared helpers for the benchmark harness.
+
+Every bench prints ``name,us_per_call,derived`` CSV rows; ``derived`` carries
+the paper-comparable quantity (FID-analog, mode coverage, comm bytes, ...).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Wall-time a jitted callable; returns (result, us_per_call)."""
+    r = None
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return r, (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

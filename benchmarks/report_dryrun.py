@@ -1,0 +1,82 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.report_dryrun [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.models.config import SHAPES
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["gemma3-4b", "mixtral-8x22b", "qwen3-8b", "phi4-mini-3.8b",
+              "whisper-medium", "glm4-9b", "zamba2-7b", "granite-moe-3b-a800m",
+              "chameleon-34b", "mamba2-2.7b"]
+
+
+def load(dirpath, tag):
+    recs = {}
+    for p in glob.glob(os.path.join(dirpath, f"{tag}__*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], "2x16x16" if r.get("multi_pod") else "16x16")] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(recs, mesh):
+    lines = [
+        f"\n#### Mesh {mesh}\n",
+        "| arch | shape | status | compute | memory | collective (ICI) | dominant | HBM/dev | agent-axis B/step |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skip: {r['reason'][:48]} | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR {r['error'][:40]} | | | | | | |")
+                continue
+            t = r["roofline_per_step"]
+            hbm = r["memory"]["total_hbm_bytes"] / 2 ** 30
+            ag = r["collective_by_axis"].get("agent", 0) / r["steps_per_call"]
+            lines.append(
+                f"| {arch} | {shape} | ok | {fmt_s(t['compute_s'])} | "
+                f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                f"{t['dominant'].replace('_s','')} | {hbm:.1f}GiB | {ag/1e6:.1f}MB |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    recs = load(args.dir, args.tag)
+    meshes = sorted({k[2] for k in recs})
+    for mesh in meshes:
+        print(table(recs, mesh))
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    err = sum(1 for r in recs.values() if r["status"] == "error")
+    print(f"\n**Totals ({args.tag})**: {ok} compiled, {skip} documented skips, "
+          f"{err} errors across {len(recs)} (arch x shape x mesh) entries.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   Fig 5  (2D system, K sweep)          -> bench_toy.bench_2d
+#   Fig 6  (mixed Gaussian)              -> bench_toy.bench_mixed_gaussian
+#   Fig 7  (Swiss roll)                  -> bench_toy.bench_swissroll
+#   Fig 1b (CIFAR FID vs K + baseline)   -> bench_images.bench_fd_vs_k
+#   Fig 2b (CelebA attribute split)      -> bench_images.bench_celeba_attributes
+#   Fig 3  (PG&E household clusters)     -> bench_timeseries.bench_household
+#   Fig 4  (EV charging clusters)        -> bench_timeseries.bench_ev
+#   §3.2   (communication complexity)    -> bench_comm
+#   Lem1/2 (drift vs bounds)             -> bench_lemmas
+#   (g)    (roofline from dry-run)       -> bench_roofline
+#   kernels (Pallas vs oracle)           -> bench_kernels
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated bench subset")
+    ap.add_argument("--fast", action="store_true", help="reduced step budgets")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_comm, bench_images, bench_kernels,
+                            bench_lemmas, bench_roofline, bench_timeseries,
+                            bench_toy)
+
+    fast = args.fast
+    suites = {
+        "toy": lambda: (bench_toy.bench_2d(steps=800 if fast else 2500),
+                        bench_toy.bench_mixed_gaussian(steps=600 if fast else 2000),
+                        bench_toy.bench_swissroll(steps=600 if fast else 2000)),
+        "images": lambda: (bench_images.bench_fd_vs_k(steps=120 if fast else 400),
+                           bench_images.bench_celeba_attributes(steps=100 if fast else 300)),
+        "timeseries": lambda: (bench_timeseries.bench_household(steps=200 if fast else 600),
+                               bench_timeseries.bench_ev(steps=200 if fast else 600)),
+        "comm": bench_comm.main,
+        "lemmas": bench_lemmas.main,
+        "roofline": bench_roofline.main,
+        "kernels": bench_kernels.main,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            print(f"{name}_SUITE_ERROR,0.0,{traceback.format_exc(limit=1).splitlines()[-1]}",
+                  flush=True)
+        print(f"# suite {name} finished in {time.time()-t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

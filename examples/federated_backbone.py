@@ -1,0 +1,79 @@
+"""End-to-end federated adversarial training of an assigned backbone.
+
+Four agents with non-iid token streams train (G = reduced assigned arch,
+D = feature discriminator) under FedGAN; the script reports per-round
+losses, the §3.2 communication accounting, and final agent synchrony.
+
+Run:  PYTHONPATH=src python examples/federated_backbone.py \
+          --arch mamba2-2.7b --steps 60 --K 5
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.core import FedGAN, FedGANConfig
+from repro.data import FederatedRounds, synthetic
+from repro.launch.steps import make_lm_gan_task
+from repro.optim import Adam, constant, equal_timescale
+
+tmap = jax.tree_util.tree_map
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-2.7b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--K", type=int, default=5)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--mode", default="fedgan",
+                    choices=["fedgan", "distributed", "local_only"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    B, K, T = args.agents, args.K, 32
+    task = make_lm_gan_task(cfg)
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
+                                    mode=args.mode),
+                 opt_g=Adam(), opt_d=Adam(),
+                 scales=equal_timescale(constant(1e-3)))
+    state = fed.init_state(jax.random.key(0))
+
+    rng = jax.random.key(1)
+    agent_data = []
+    for i in range(B):
+        d = {"tokens": synthetic.sample_agent_tokens(
+            rng, 512, T, cfg.vocab_size, agent=i, num_agents=B)}
+        if cfg.family == "audio":
+            d["frames"] = 0.1 * jax.random.normal(
+                jax.random.fold_in(rng, 50 + i),
+                (512, cfg.encoder_seq, cfg.d_model))
+        agent_data.append(d)
+    rounds = FederatedRounds(agent_data, (1, B), batch_size=8, sync_interval=K)
+
+    acct = fed.comm_bytes_per_round(state)
+    print(f"arch={cfg.name} (smoke) B={B} K={K} mode={args.mode}")
+    print(f"§3.2 accounting: M={acct['param_bytes_M']/1e6:.1f}MB/agent, "
+          f"fedgan {acct['per_agent_per_round']['fedgan']/1e6:.1f}MB/round vs "
+          f"distributed {acct['per_agent_per_round']['distributed']/1e6:.1f}MB/round "
+          f"(x{acct['ratio']} saving)")
+
+    round_fn = jax.jit(fed.round)
+    for r in range(args.steps // K):
+        rng, rb = jax.random.split(rng)
+        batches, seeds = rounds.round_batches(rb)
+        state, m = round_fn(state, batches, seeds)
+        print(f"  round {r:3d} step {(r+1)*K:4d}: "
+              f"d_loss={float(jnp.mean(m['d_loss'])):.4f} "
+              f"g_loss={float(jnp.mean(m['g_loss'])):.4f} "
+              f"lm={float(jnp.mean(m['lm'])):.4f}")
+
+    leaf = jax.tree_util.tree_leaves(state["params"]["gen"])[0]
+    synced = bool(jnp.allclose(leaf[0, 0], leaf[0, -1], atol=1e-5))
+    print(f"agents synced after final round: {synced} "
+          f"(expected {args.mode != 'local_only'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end federated image GAN (paper §4.2 shape, synthetic data gate).
+
+B=5 agents each hold TWO of ten image classes (the paper's MNIST/CIFAR
+split); an ACGAN pair trains with K=20 local steps per sync.  Reports the
+Fréchet-distance score against held-out real data, compares against the
+distributed-GAN baseline, and exercises checkpoint save/restore.
+
+Run:  PYTHONPATH=src python examples/federated_images.py [--steps 400]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core import FedGAN, FedGANConfig
+from repro.data import synthetic
+from repro.evals import fd_score
+from repro.launch.train import acgan_task
+from repro.optim import Adam, constant, equal_timescale
+
+HW, NCLS, B = 16, 10, 5
+
+
+def train(K, steps, mode, seed=0, n=32):
+    task, (G, D) = acgan_task(hw=HW, num_classes=NCLS)
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
+                                    mode=mode),
+                 opt_g=Adam(b1=0.5), opt_d=Adam(b1=0.5),
+                 scales=equal_timescale(constant(1e-3)))
+    state = fed.init_state(jax.random.key(seed))
+    rng = jax.random.key(seed + 1)
+    round_fn = jax.jit(fed.round)
+    for r in range(max(steps // K, 1)):
+        rng, r1, r2, r3, r4 = jax.random.split(rng, 5)
+        labs, imgs = [], []
+        for i in range(B):
+            lab = jax.random.randint(jax.random.fold_in(r1, r * B + i),
+                                     (K * n,), 2 * i, 2 * i + 2)
+            img = synthetic.sample_class_images(
+                jax.random.fold_in(r2, r * B + i), K * n, lab, hw=HW,
+                num_classes=NCLS)
+            labs.append(lab.reshape(K, n))
+            imgs.append(img.reshape(K, n, HW, HW, 3))
+        batch = {"x": jnp.stack(imgs, 1).reshape(K, 1, B, n, HW, HW, 3),
+                 "y": jnp.stack(labs, 1).reshape(K, 1, B, n),
+                 "z": jax.random.normal(r3, (K, 1, B, n, 62))}
+        seeds = jax.random.randint(r4, (K, 1, B), 0, 2 ** 31 - 1).astype(jnp.uint32)
+        state, m = round_fn(state, batch, seeds)
+    return fed, state, (G, D)
+
+
+def evaluate(fed, state, G, n_eval=512):
+    gp = fed.averaged_params(state)["gen"]
+    rng = jax.random.key(99)
+    lab = jax.random.randint(rng, (n_eval,), 0, NCLS)
+    fake = G.apply(gp, jax.random.normal(jax.random.fold_in(rng, 1),
+                                         (n_eval, 62)), lab)
+    real = synthetic.sample_class_images(jax.random.fold_in(rng, 2), n_eval,
+                                         lab, hw=HW, num_classes=NCLS)
+    return fd_score(jax.random.key(7), real, fake)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--K", type=int, default=20)
+    args = ap.parse_args()
+
+    print(f"FedGAN ACGAN, B={B} agents x 2 classes, K={args.K}")
+    fed, state, (G, D) = train(args.K, args.steps, "fedgan")
+    fd = evaluate(fed, state, G)
+    print(f"  FedGAN      (K={args.K}): FD = {fd:.2f}")
+
+    fed_b, state_b, (Gb, _) = train(1, args.steps, "distributed")
+    fd_b = evaluate(fed_b, state_b, Gb)
+    print(f"  distributed (K=1):  FD = {fd_b:.2f}  "
+          f"(paper claim: FedGAN stays close at 1/{args.K} the communication)")
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, state, step=args.steps,
+                        metadata={"K": args.K, "fd": fd})
+        restored, man = restore_checkpoint(d)
+        fd_r = evaluate(fed, restored, G)
+        print(f"  checkpoint roundtrip: FD = {fd_r:.2f} (must match)")
+        assert abs(fd_r - fd) < 1e-6
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end serving driver: batched prefill + decode of a backbone.
+
+Loads a reduced assigned architecture (any of the 10 via --arch), prefill's
+a batch of prompts, then decodes new tokens step by step — the same
+prefill/serve_step pair the 32k/500k dry-run shapes lower.  Sliding-window
+archs can serve with O(window) ring caches (--ring).
+
+Run:  PYTHONPATH=src python examples/serve_generator.py --arch gemma3-4b \
+          --batch 4 --prompt-len 32 --gen 16 --ring
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.transformer import Backbone
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--ring", action="store_true")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    bb = Backbone(cfg, ring_cache=args.ring)
+    params = bb.init(jax.random.key(0))
+    rng = jax.random.key(1)
+    B, T, G = args.batch, args.prompt_len, args.gen
+    max_seq = T + G
+    prompts = jax.random.randint(rng, (B, T), 0, cfg.vocab_size)
+    frames = None
+    if cfg.family == "audio":
+        frames = 0.1 * jax.random.normal(jax.random.fold_in(rng, 2),
+                                         (B, cfg.encoder_seq, cfg.d_model))
+
+    # ---- prefill ----
+    t0 = time.perf_counter()
+    prefill = jax.jit(lambda p, t: bb.prefill(p, t, encoder_frames=frames,
+                                              max_seq=max_seq))
+    out = prefill(params, prompts)
+    jax.block_until_ready(out["logits"])
+    t_prefill = time.perf_counter() - t0
+    cache = out["cache"]
+    if cfg.family == "audio":
+        mem = out["memory"]
+        blk = bb._block(cross=True)
+        cache["cross"] = jax.vmap(
+            lambda bp: blk.attn.build_memory_cache(bp["xattn"], mem))(params["blocks"])
+
+    # ---- decode loop (greedy/temperature sampling over the REAL vocab; the
+    # head is padded to a multiple of 256 for sharding) ----
+    decode = jax.jit(bb.decode)
+    logits = out["logits"][:, -1]
+
+    def sample(rng, logits):
+        logits = logits[:, :cfg.vocab_size]  # mask vocab padding
+        if args.temperature == 0:
+            return jnp.argmax(logits, -1)
+        return jax.random.categorical(rng, logits / args.temperature, axis=-1)
+
+    tokens = []
+    t0 = time.perf_counter()
+    tok = sample(jax.random.fold_in(rng, 100), logits)
+    for i in range(G):
+        tokens.append(tok)
+        logits1, cache = decode(params, tok[:, None], cache, jnp.int32(T + i))
+        tok = sample(jax.random.fold_in(rng, 101 + i), logits1[:, 0])
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.stack(tokens, axis=1)
+    print(f"arch={cfg.name} (smoke) ring_cache={args.ring}")
+    print(f"prefill: {B}x{T} tokens in {t_prefill*1e3:.1f} ms "
+          f"({B*T/t_prefill:.0f} tok/s incl. compile)")
+    print(f"decode:  {G} steps x batch {B} in {t_decode*1e3:.1f} ms "
+          f"({B*G/t_decode:.0f} tok/s)")
+    print(f"generated ids[0]: {gen[0].tolist()}")
+    assert gen.shape == (B, G) and int(gen.max()) < cfg.vocab_size
+    print("serve OK ✓")
+
+
+if __name__ == "__main__":
+    main()

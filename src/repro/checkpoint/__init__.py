@@ -1,0 +1,3 @@
+from repro.checkpoint.store import list_checkpoints, restore_checkpoint, save_checkpoint
+
+__all__ = ["list_checkpoints", "restore_checkpoint", "save_checkpoint"]

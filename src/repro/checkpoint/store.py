@@ -1,0 +1,120 @@
+"""Checkpointing: pytree <-> npz with a JSON manifest.
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json, plus <dir>/LATEST.
+Works for FedGAN agent-stacked states (the (P, A) axis is just leading
+dims) and plain model params.  Restore rebuilds the exact pytree structure
+and dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # registers bfloat16 et al. with numpy
+import numpy as np
+
+_NATIVE_KINDS = set("biufc")  # bool/int/uint/float/complex natively savable
+
+
+def _is_native(dtype: np.dtype) -> bool:
+    return dtype.kind in _NATIVE_KINDS and dtype.name not in (
+        "bfloat16", "float8_e4m3fn", "float8_e5m2")
+
+
+def _flatten_with_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from _flatten_with_paths(tree[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten_with_paths(v, f"{prefix}/{i}" if prefix else str(i))
+    else:
+        yield prefix, tree
+
+
+def _tree_structure(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _tree_structure(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"__kind__": "tuple", "items": [_tree_structure(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"__kind__": "list", "items": [_tree_structure(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _rebuild(struct, leaves_by_path, prefix=""):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, leaves_by_path, f"{prefix}/{k}" if prefix else str(k))
+                for k, v in struct["items"].items()}
+    if kind in ("tuple", "list"):
+        seq = [_rebuild(v, leaves_by_path, f"{prefix}/{i}" if prefix else str(i))
+               for i, v in enumerate(struct["items"])]
+        return tuple(seq) if kind == "tuple" else seq
+    return leaves_by_path[prefix]
+
+
+def save_checkpoint(directory: str, state: Any, *, step: int,
+                    metadata: dict | None = None) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    arrays = {}
+    dtypes = []
+    for i, (p, leaf) in enumerate(_flatten_with_paths(state)):
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        dtypes.append(arr.dtype.name)
+        if not _is_native(arr.dtype):
+            # bfloat16 etc.: store the raw bytes, dtype recorded in manifest
+            arr = arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,))
+        arrays[f"a{i}"] = arr
+    paths = [p for p, _ in _flatten_with_paths(state)]
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "dtypes": dtypes,
+        "structure": _tree_structure(state),
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(os.path.basename(path))
+    return path
+
+
+def restore_checkpoint(directory: str, *, step: int | None = None) -> tuple[Any, dict]:
+    if step is None:
+        with open(os.path.join(directory, "LATEST")) as f:
+            name = f.read().strip()
+        path = os.path.join(directory, name)
+    else:
+        path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = manifest.get("dtypes", [])
+    leaves_by_path = {}
+    for i, p in enumerate(manifest["paths"]):
+        arr = data[f"a{i}"]
+        name = dtypes[i] if i < len(dtypes) else arr.dtype.name
+        if name != arr.dtype.name:  # stored as raw bytes
+            dt = np.dtype(name)
+            arr = arr.reshape(-1).view(dt).reshape(arr.shape[:-1])
+        leaves_by_path[p] = jnp.asarray(arr)
+    state = _rebuild(manifest["structure"], leaves_by_path)
+    return state, manifest
+
+
+def list_checkpoints(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)

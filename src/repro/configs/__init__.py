@@ -1,0 +1,3 @@
+from repro.configs.registry import get_config, get_shape, list_archs, pair_supported
+
+__all__ = ["get_config", "get_shape", "list_archs", "pair_supported"]

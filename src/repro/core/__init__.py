@@ -1,0 +1,25 @@
+# The paper's primary contribution: FedGAN (Algorithm 1) + its convergence
+# instrumentation (Lemmas 1-2) + the distributed-GAN comparison baseline.
+from repro.core import losses
+from repro.core.convergence import (
+    ConstantEstimates,
+    estimate_constants,
+    measure_drift,
+    r1_bound,
+    r2_bound,
+    tree_diff_norm,
+    tree_norm,
+)
+from repro.core.fedgan import (
+    FedGAN,
+    FedGANConfig,
+    GANTask,
+    dataset_weights,
+    uniform_weights,
+)
+
+__all__ = [
+    "ConstantEstimates", "FedGAN", "FedGANConfig", "GANTask",
+    "dataset_weights", "estimate_constants", "losses", "measure_drift",
+    "r1_bound", "r2_bound", "tree_diff_norm", "tree_norm", "uniform_weights",
+]

@@ -1,0 +1,220 @@
+"""Convergence-theory instrumentation (paper §3.3, Lemmas 1–2).
+
+The paper bounds, for equal time scales and learning rate a(n) constant
+within a sync interval:
+
+  Lemma 1 (agent drift vs the virtual centralized sequence (v_n, phi_n)):
+      E||w_n^i - v_n|| + E||th_n^i - ph_n||
+          <= r1(n) = (sg + mg + sh)/(2L) * [(1 + 2 a L)^(n mod K) - 1]
+
+  Lemma 2 (synced average drift):
+      E||w_n - v_n|| + E||th_n - ph_n||
+          <= r2(n) = (sg + sh + mg)/(2L) * [(1 + 2 a L)^K - 1] - a mg K
+
+with (A5) constants sg, sh (stochastic-gradient variance bounds), mg
+(non-iid gradient divergence bound) and L the Lipschitz constant (A1).
+
+This module provides:
+  * r1 / r2 evaluators,
+  * empirical estimators for (L, sg, sh, mg) from a GANTask + per-agent data,
+  * a drift-measurement harness that co-simulates FedGAN with the virtual
+    centralized SGD sequence of eq. (7) and reports measured drift vs bound
+    (consumed by benchmarks/bench_lemmas.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.core.fedgan import FedGAN, GANTask
+
+tmap = jax.tree_util.tree_map
+
+
+def tree_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_diff_norm(a, b) -> jax.Array:
+    return tree_norm(tmap(lambda x, y: x - y, a, b))
+
+
+# ---------------------------------------------------------------------------
+# Lemma bounds
+# ---------------------------------------------------------------------------
+
+def r1_bound(n, *, a, K, L, sg, sh, mg):
+    """Lemma 1 RHS at step n (a = a(n-1), constant within the interval)."""
+    m = jnp.asarray(n) % K
+    return (sg + mg + sh) / (2 * L) * ((1 + 2 * a * L) ** m - 1.0)
+
+
+def r2_bound(n, *, a, K, L, sg, sh, mg):
+    """Lemma 2 RHS (uniform over the interval)."""
+    return ((sg + sh + mg) / (2 * L) * ((1 + 2 * a * L) ** K - 1.0)
+            - a * mg * K)
+
+
+# ---------------------------------------------------------------------------
+# (A1)/(A5) constant estimation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantEstimates:
+    L: float
+    sigma_g: float   # disc stochastic-gradient deviation bound
+    sigma_h: float   # gen stochastic-gradient deviation bound
+    mu_g: float      # non-iid gradient divergence bound (disc)
+
+
+def _grads(task: GANTask, params, batch, rng):
+    rd, rg = jax.random.split(rng)
+    gd = jax.grad(lambda d: task.disc_loss({**params, "disc": d}, batch, rd))(params["disc"])
+    gg = jax.grad(lambda g: task.gen_loss({**params, "gen": g}, batch, rg))(params["gen"])
+    return gd, gg
+
+
+def _sample_minibatch(data, rng, size):
+    n = jax.tree_util.tree_leaves(data)[0].shape[0]
+    idx = jax.random.randint(rng, (size,), 0, n)
+    return tmap(lambda x: x[idx], data)
+
+
+def estimate_constants(task: GANTask, params, agent_data: Sequence[Any],
+                       rng, *, minibatch: int = 64, n_var_samples: int = 8,
+                       n_lip_samples: int = 8, lip_eps: float = 1e-2,
+                       weights=None) -> ConstantEstimates:
+    """Empirical (A1)/(A5) constants at the given parameter point.
+
+    ``agent_data[i]`` is agent i's full local dataset (a batch pytree); the
+    pooled "true" gradient is the p_i-weighted mean of per-agent full-data
+    gradients (this matches the paper's definition of g = grad of the
+    centralized loss on pooled data).
+    """
+    B = len(agent_data)
+    w = (jnp.full((B,), 1.0 / B) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+
+    rng, rfull = jax.random.split(rng)
+    full_gd, full_gg = [], []
+    for i, data in enumerate(agent_data):
+        gd, gg = _grads(task, params, data, rfull)
+        full_gd.append(gd)
+        full_gg.append(gg)
+    pooled_gd = tmap(lambda *xs: sum(wi * x for wi, x in zip(w, xs)), *full_gd)
+
+    # mu_g: max_i || g^i - g ||
+    mu_g = max(float(tree_diff_norm(full_gd[i], pooled_gd)) for i in range(B))
+
+    # sigma_g / sigma_h: E || minibatch grad - full grad ||  (max over agents)
+    sg, sh = 0.0, 0.0
+    for i, data in enumerate(agent_data):
+        dev_g, dev_h = [], []
+        for s in range(n_var_samples):
+            rng, r1, r2 = jax.random.split(rng, 3)
+            mb = _sample_minibatch(data, r1, minibatch)
+            gd, gg = _grads(task, params, mb, r2)
+            dev_g.append(float(tree_diff_norm(gd, full_gd[i])))
+            dev_h.append(float(tree_diff_norm(gg, full_gg[i])))
+        sg = max(sg, sum(dev_g) / len(dev_g))
+        sh = max(sh, sum(dev_h) / len(dev_h))
+
+    # L: finite-difference Lipschitz estimate of the joint gradient field
+    joint = {"disc": params["disc"], "gen": params["gen"]}
+    L = 0.0
+    for s in range(n_lip_samples):
+        rng, r1, r2 = jax.random.split(rng, 3)
+        flat, unflat = jax.flatten_util.ravel_pytree(joint)
+        direction = jax.random.normal(r1, flat.shape)
+        direction = direction / (jnp.linalg.norm(direction) + 1e-12)
+        perturbed = unflat(flat + lip_eps * direction)
+        p2 = {**params, **perturbed}
+        gd1, gg1 = _grads(task, params, agent_data[0], r2)
+        gd2, gg2 = _grads(task, p2, agent_data[0], r2)
+        dg = tree_diff_norm({"d": gd1, "g": gg1}, {"d": gd2, "g": gg2})
+        L = max(L, float(dg) / lip_eps)
+
+    return ConstantEstimates(L=max(L, 1e-6), sigma_g=sg, sigma_h=sh, mu_g=mu_g)
+
+
+# ---------------------------------------------------------------------------
+# Drift measurement: FedGAN vs the virtual centralized sequence (eq. 7)
+# ---------------------------------------------------------------------------
+
+
+def measure_drift(fed: FedGAN, state, agent_data: Sequence[Any], rng, *,
+                  n_steps: int, minibatch: int = 64,
+                  pooled_grad_data: Sequence[Any] | None = None) -> dict:
+    """Co-simulate ``n_steps`` of FedGAN (SGD) with the virtual centralized
+    sequence (v_n, phi_n) that applies the TRUE pooled gradient, resetting
+    v to the synced average at every multiple of K (exactly eq. (7)).
+
+    Returns per-step arrays: measured agent drift (Lemma 1 LHS, max over
+    agents), measured average drift (Lemma 2 LHS), and the schedule a(n).
+    Intended for small models (runs a python loop).
+    """
+    cfg = fed.cfg
+    P, A = cfg.agent_grid
+    B = P * A
+    K = cfg.sync_interval
+    assert B == len(agent_data)
+    pooled = pooled_grad_data if pooled_grad_data is not None else agent_data
+    w = fed._w().reshape(-1)
+
+    def pooled_grads(params, rng):
+        gds, ggs = [], []
+        for d in pooled:
+            gd, gg = _grads(fed.task, params, d, rng)
+            gds.append(gd)
+            ggs.append(gg)
+        gd = tmap(lambda *xs: sum(wi * x for wi, x in zip(w, xs)), *gds)
+        gg = tmap(lambda *xs: sum(wi * x for wi, x in zip(w, xs)), *ggs)
+        return gd, gg
+
+    virt = fed.averaged_params(state)
+    agent_drift, avg_drift, lrs = [], [], []
+
+    for n in range(n_steps):
+        lr_a = float(fed.scales.a(jnp.float32(n)))
+        lr_b = float(fed.scales.b(jnp.float32(n)))
+        # one FedGAN step across agents
+        rng, rb, rs = jax.random.split(rng, 3)
+        mbs = [_sample_minibatch(agent_data[i], jax.random.fold_in(rb, i), minibatch)
+               for i in range(B)]
+        batch = tmap(lambda *xs: jnp.stack(xs).reshape((P, A) + xs[0].shape), *mbs)
+        seeds = jax.random.randint(rs, (1, P, A), 0, 2 ** 31 - 1, jnp.uint32)
+        state, _ = jax.lax.scan(fed._step, state,
+                                (tmap(lambda x: x[None], batch), seeds))
+        # virtual centralized true-gradient step
+        rng, rv = jax.random.split(rng)
+        vgd, vgg = pooled_grads(virt, rv)
+        virt = {"disc": tmap(lambda p, g: p - lr_a * g, virt["disc"], vgd),
+                "gen": tmap(lambda p, g: p - lr_b * g, virt["gen"], vgg)}
+
+        step = n + 1
+        if step % K == 0:
+            state = fed._sync(state)
+            virt = fed.averaged_params(state)  # v_n := w_n at sync points
+
+        # Lemma 1 LHS: max_i ||w_i - v|| + ||th_i - ph||
+        drifts = []
+        for p in range(P):
+            for a in range(A):
+                ap = fed.agent_params(state, p, a)
+                drifts.append(float(tree_diff_norm(ap["disc"], virt["disc"])
+                                    + tree_diff_norm(ap["gen"], virt["gen"])))
+        agent_drift.append(max(drifts))
+        avg = fed.averaged_params(state)
+        avg_drift.append(float(tree_diff_norm(avg["disc"], virt["disc"])
+                               + tree_diff_norm(avg["gen"], virt["gen"])))
+        lrs.append(lr_a)
+
+    return {"agent_drift": jnp.asarray(agent_drift),
+            "avg_drift": jnp.asarray(avg_drift),
+            "lr": jnp.asarray(lrs)}

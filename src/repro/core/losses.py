@@ -1,0 +1,105 @@
+"""GAN loss zoo.
+
+The paper's experiments use the original (non-saturating) GAN loss for the
+toy/MLP nets, the ACGAN objective (binary + auxiliary classification) for
+images, and a CGAN objective for time series.  We expose each as a pair of
+pure loss functions
+
+    d_loss(d_logits_real, d_logits_fake) -> scalar   (minimised by D)
+    g_loss(d_logits_fake) -> scalar                  (minimised by G)
+
+plus the ACGAN auxiliary terms.  All reductions are means, f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+# -- non-saturating GAN (Goodfellow et al.) ---------------------------------
+
+def ns_d_loss(real_logits, fake_logits):
+    return (jnp.mean(jax.nn.softplus(-_f32(real_logits)))
+            + jnp.mean(jax.nn.softplus(_f32(fake_logits))))
+
+
+def ns_g_loss(fake_logits):
+    return jnp.mean(jax.nn.softplus(-_f32(fake_logits)))
+
+
+# -- minimax (the 2D toy analysis uses the raw zero-sum form) ----------------
+
+def minimax_value(real_scores, fake_scores):
+    """V(D, G) with sigmoid-free quadratic D (paper's 2D system uses
+    f(x) = D(x) directly);  D ascends V, G descends V."""
+    return jnp.mean(_f32(real_scores)) - jnp.mean(_f32(fake_scores))
+
+
+# -- least squares GAN -------------------------------------------------------
+
+def ls_d_loss(real_logits, fake_logits):
+    return 0.5 * (jnp.mean((_f32(real_logits) - 1.0) ** 2)
+                  + jnp.mean(_f32(fake_logits) ** 2))
+
+
+def ls_g_loss(fake_logits):
+    return 0.5 * jnp.mean((_f32(fake_logits) - 1.0) ** 2)
+
+
+# -- hinge --------------------------------------------------------------------
+
+def hinge_d_loss(real_logits, fake_logits):
+    return (jnp.mean(jax.nn.relu(1.0 - _f32(real_logits)))
+            + jnp.mean(jax.nn.relu(1.0 + _f32(fake_logits))))
+
+
+def hinge_g_loss(fake_logits):
+    return -jnp.mean(_f32(fake_logits))
+
+
+# -- WGAN (+ gradient penalty helper) ----------------------------------------
+
+def w_d_loss(real_logits, fake_logits):
+    return jnp.mean(_f32(fake_logits)) - jnp.mean(_f32(real_logits))
+
+
+def w_g_loss(fake_logits):
+    return -jnp.mean(_f32(fake_logits))
+
+
+def gradient_penalty(d_apply, d_params, real, fake, rng, weight=10.0):
+    """WGAN-GP penalty on interpolates (used by the Swiss-roll experiment,
+    following Gulrajani et al. [9])."""
+    eps_shape = (real.shape[0],) + (1,) * (real.ndim - 1)
+    eps = jax.random.uniform(rng, eps_shape)
+    inter = eps * real + (1.0 - eps) * fake
+
+    def scalar_d(x):
+        return jnp.sum(d_apply(d_params, x))
+
+    grads = jax.grad(scalar_d)(inter)
+    gn = jnp.sqrt(jnp.sum(jnp.square(_f32(grads)),
+                          axis=tuple(range(1, grads.ndim))) + 1e-12)
+    return weight * jnp.mean((gn - 1.0) ** 2)
+
+
+# -- ACGAN auxiliary classification -------------------------------------------
+
+def aux_class_loss(cls_logits, labels):
+    lp = jax.nn.log_softmax(_f32(cls_logits), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, labels[:, None], axis=-1))
+
+
+def acgan_d_loss(real_bin, fake_bin, real_cls, fake_cls, labels):
+    """D maximises binary discrimination + classifies BOTH real and fake."""
+    return (ns_d_loss(real_bin, fake_bin)
+            + aux_class_loss(real_cls, labels)
+            + aux_class_loss(fake_cls, labels))
+
+
+def acgan_g_loss(fake_bin, fake_cls, labels):
+    return ns_g_loss(fake_bin) + aux_class_loss(fake_cls, labels)

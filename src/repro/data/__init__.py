@@ -1,0 +1,12 @@
+from repro.data import synthetic
+from repro.data.federated import (
+    FederatedRounds,
+    dirichlet_partition,
+    label_shard_partition,
+    partition_sizes,
+)
+
+__all__ = [
+    "FederatedRounds", "dirichlet_partition", "label_shard_partition",
+    "partition_sizes", "synthetic",
+]

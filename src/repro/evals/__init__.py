@@ -1,0 +1,8 @@
+from repro.evals.fd import fd_score, frechet_distance, random_feature_fn
+from repro.evals.kmeans import centroid_match_score, kmeans
+from repro.evals.modes import mode_stats, wasserstein_1d_proj
+
+__all__ = [
+    "centroid_match_score", "fd_score", "frechet_distance", "kmeans",
+    "mode_stats", "random_feature_fn", "wasserstein_1d_proj",
+]

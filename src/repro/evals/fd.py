@@ -1,0 +1,53 @@
+"""Fréchet distance score (FID stand-in).
+
+No pretrained Inception-v3 is available offline, so we keep the metric's
+Gaussian-Fréchet form but swap the feature extractor for a *fixed* random
+two-layer ReLU projection (seeded once per evaluation run; identical for
+real and generated batches, so the score is comparable across K sweeps and
+against the distributed-GAN baseline — which is exactly how the paper uses
+FID in Fig. 1b / 2b).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def random_feature_fn(rng, in_dim: int, feat_dim: int = 64, hidden: int = 256):
+    k1, k2 = jax.random.split(rng)
+    w1 = jax.random.normal(k1, (in_dim, hidden)) / jnp.sqrt(in_dim)
+    w2 = jax.random.normal(k2, (hidden, feat_dim)) / jnp.sqrt(hidden)
+
+    def feats(x):
+        h = jnp.maximum(x.reshape(x.shape[0], -1) @ w1, 0.0)
+        return h @ w2
+
+    return feats
+
+
+def _sqrtm_psd(mat):
+    """Matrix square root of a symmetric PSD matrix via eigh."""
+    vals, vecs = np.linalg.eigh(mat)
+    vals = np.clip(vals, 0.0, None)
+    return (vecs * np.sqrt(vals)) @ vecs.T
+
+
+def frechet_distance(feats_real, feats_fake) -> float:
+    """d^2 = ||mu_r - mu_f||^2 + Tr(S_r + S_f - 2 (S_r^1/2 S_f S_r^1/2)^1/2)."""
+    fr = np.asarray(feats_real, np.float64)
+    ff = np.asarray(feats_fake, np.float64)
+    mu_r, mu_f = fr.mean(0), ff.mean(0)
+    cr = np.cov(fr, rowvar=False) + 1e-6 * np.eye(fr.shape[1])
+    cf = np.cov(ff, rowvar=False) + 1e-6 * np.eye(ff.shape[1])
+    sr = _sqrtm_psd(cr)
+    mid = _sqrtm_psd(sr @ cf @ sr)
+    d2 = float(np.sum((mu_r - mu_f) ** 2) + np.trace(cr + cf - 2 * mid))
+    return max(d2, 0.0)
+
+
+def fd_score(rng, real, fake, *, feat_dim: int = 64) -> float:
+    """End-to-end FD between two sample batches (any shape; flattened)."""
+    in_dim = int(np.prod(real.shape[1:]))
+    feats = random_feature_fn(rng, in_dim, feat_dim)
+    return frechet_distance(feats(real), feats(fake))

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot spots, each validated in
+# interpret mode against its pure-jnp ref.py oracle:
+#   fedavg/          — fused weighted parameter average (the sync reduction)
+#   flash_attention/ — online-softmax GQA attention, causal + sliding window
+#   ssd_scan/        — Mamba2 SSD chunked scan (intra-chunk + recurrent state)

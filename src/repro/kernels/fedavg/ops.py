@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the fedavg kernel: pytree-level weighted average.
+
+``interpret`` defaults to True off-TPU so the kernel body executes (and is
+validated) on CPU; on a real TPU backend the compiled Mosaic kernel runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg.kernel import fedavg_flat
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fedavg_tree(weights, stacked_tree, *, block: int = 512,
+                interpret: bool | None = None):
+    """Weighted average over the leading agent axis of every leaf of
+    ``stacked_tree`` (leaves shaped (B, ...) or (P, A, ...) flattened by the
+    caller).  Returns the averaged tree (agent axis removed)."""
+    interp = _default_interpret() if interpret is None else interpret
+    w = jnp.reshape(weights, (-1,))
+    B = int(w.shape[0])
+
+    def avg(x):
+        # consume as many leading dims as make up the agent axis (B or (P, A))
+        prod, nd = 1, 0
+        while prod < B:
+            prod *= x.shape[nd]
+            nd += 1
+        if prod != B:
+            raise ValueError(f"leaf shape {x.shape} incompatible with {B} agents")
+        flat = x.reshape(B, -1)
+        out = fedavg_flat(w, flat, block=block, interpret=interp)
+        return out.reshape(x.shape[nd:]).astype(x.dtype)
+
+    return jax.tree_util.tree_map(avg, stacked_tree)

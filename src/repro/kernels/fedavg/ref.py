@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fedavg kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_flat_ref(weights: jax.Array, stacked: jax.Array) -> jax.Array:
+    """stacked: (B, N); weights: (B,).  f32 accumulate, output in input dtype."""
+    acc = jnp.einsum("b,bn->n", weights.astype(jnp.float32),
+                     stacked.astype(jnp.float32))
+    return acc.astype(stacked.dtype)
+
+
+def fedavg_tree_ref(weights, stacked_tree):
+    """Weighted average over the leading agent axis of every leaf."""
+    w = weights.reshape(-1).astype(jnp.float32)
+
+    def avg(x):
+        flat = x.reshape(w.shape[0], -1)
+        return fedavg_flat_ref(w, flat).reshape(x.shape[1:]).astype(x.dtype)
+
+    return jax.tree_util.tree_map(avg, stacked_tree)

@@ -1,0 +1,25 @@
+"""Public flash-attention wrapper in model layout (B, T, nh, hd)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, T, nh, hd); k/v: (B, S, nkv, hd) -> (B, T, nh, hd)."""
+    interp = _default_interpret() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interp)
+    return jnp.swapaxes(out, 1, 2)

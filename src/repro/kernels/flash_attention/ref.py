@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, nh, T, hd); k/v: (B, nkv, S, hd) -> (B, nh, T, hd)."""
+    B, nh, T, hd = q.shape
+    _, nkv, S, _ = k.shape
+    group = nh // nkv
+    qg = q.reshape(B, nkv, group, T, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qg, kf) / math.sqrt(hd)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", p, vf)
+    return o.reshape(B, nh, T, hd).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Public SSD wrapper (model layout)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_bthd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, head_block: int = 4,
+        interpret: bool | None = None):
+    """Mamba2 SSD scan.  x: (Bsz, T, nh, hd); dt: (Bsz, T, nh); A: (nh,);
+    B, C: (Bsz, T, ds) -> (Bsz, T, nh, hd)."""
+    interp = _default_interpret() if interpret is None else interpret
+    return ssd_bthd(x, dt, A, B, C, chunk=chunk, head_block=head_block,
+                    interpret=interp)

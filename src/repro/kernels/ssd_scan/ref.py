@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan.
+
+Recurrence (per batch b, head h):
+    S_t = a_t * S_{t-1} + dt_t * x_t ⊗ B_t          S in R^{hd x ds}
+    y_t = C_t · S_t
+with a_t = exp(A_h * dt_t), A_h < 0.
+
+Chunked form (chunk Q): inclusive log-decay cumsum L within each chunk,
+  intra:  y_i += Σ_{j<=i} exp(L_i - L_j) (C_i·B_j) dt_j x_j
+  local end state:  S_loc = Σ_j exp(L_Q - L_j) dt_j x_j ⊗ B_j
+  inter (scan over chunks):  S_c = exp(L_Q) S_{c-1} + S_loc,
+                             y_i += C_i · (exp(L_i) S_{c-1})
+All math in f32; output cast back to x.dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = 128, return_final_state: bool = False):
+    """x: (B,T,nh,hd); dt: (B,T,nh) f32 post-softplus; A: (nh,) f32 (<0);
+    B, C: (B,T,ds).  Returns (B,T,nh,hd) in x.dtype
+    (plus the final (B,nh,hd,ds) f32 state if requested)."""
+    Bsz, T, nh, hd = x.shape
+    ds = B.shape[-1]
+    Q = int(min(chunk, T))
+    if T % Q:
+        raise ValueError(f"T={T} not divisible by chunk={Q}")
+    NC = T // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, NC, Q, nh, hd)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, NC, Q, nh)
+    Bf = B.astype(jnp.float32).reshape(Bsz, NC, Q, ds)
+    Cf = C.astype(jnp.float32).reshape(Bsz, NC, Q, ds)
+
+    la = A[None, None, None, :] * dtf                    # log a_t  (B,NC,Q,nh)
+    L = jnp.cumsum(la, axis=2)                           # inclusive
+    Llast = L[:, :, -1:, :]                              # (B,NC,1,nh)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    scores = jnp.einsum("bnqs,bnps->bnqp", Cf, Bf)       # (B,NC,Q,Q) q=i,p=j
+    # valid (j <= i) log-decays are <= 0; clamp the masked j > i entries so
+    # exp() cannot overflow (inf * 0 under the mask would NaN the backward)
+    diff = jnp.minimum(L[:, :, :, None, :] - L[:, :, None, :, :], 0.0)
+    decay = jnp.exp(diff)                                # (B,NC,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask[None, None, :, :, None], scores[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bnqph,bnph,bnphd->bnqhd", M, dtf, xf)
+
+    # ---- chunk-local end states ----
+    w = jnp.exp(Llast - L) * dtf                         # (B,NC,Q,nh)
+    S_loc = jnp.einsum("bnqh,bnqhd,bnqs->bnhds", w, xf, Bf)  # (B,NC,nh,hd,ds)
+    chunk_decay = jnp.exp(Llast[:, :, 0, :])             # (B,NC,nh)
+
+    # ---- inter-chunk recurrence ----
+    def step(S_prev, inp):
+        S_loc_c, dec_c = inp                             # (B,nh,hd,ds), (B,nh)
+        S_new = dec_c[..., None, None] * S_prev + S_loc_c
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bsz, nh, hd, ds), jnp.float32)
+    S_final, S_prevs = jax.lax.scan(
+        step, S0,
+        (jnp.moveaxis(S_loc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                # (B,NC,nh,hd,ds)
+
+    y_inter = jnp.einsum("bnqs,bnqh,bnhds->bnqhd",
+                         Cf, jnp.exp(L), S_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, nh, hd).astype(x.dtype)
+    if return_final_state:
+        return y, S_final
+    return y
+
+
+def ssd_decode_ref(state, x1, dt1, A, B1, C1):
+    """One recurrent step.  state: (B,nh,hd,ds) f32; x1: (B,nh,hd);
+    dt1: (B,nh); B1, C1: (B,ds).  Returns (y1, new_state)."""
+    decay = jnp.exp(A[None] * dt1)                       # (B,nh)
+    new_state = (decay[..., None, None] * state
+                 + dt1[..., None, None]
+                 * x1.astype(jnp.float32)[..., None]
+                 * B1.astype(jnp.float32)[:, None, None, :])
+    y1 = jnp.einsum("bhds,bs->bhd", new_state, C1.astype(jnp.float32))
+    return y1.astype(x1.dtype), new_state

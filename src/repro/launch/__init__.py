@@ -1,0 +1,15 @@
+from repro.launch.mesh import (
+    DCI_BW,
+    HBM_BW,
+    HBM_BYTES,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+    make_test_mesh,
+    mesh_dims,
+)
+
+__all__ = [
+    "DCI_BW", "HBM_BW", "HBM_BYTES", "ICI_BW", "PEAK_FLOPS_BF16",
+    "make_production_mesh", "make_test_mesh", "mesh_dims",
+]

@@ -1,0 +1,269 @@
+"""FedGAN training launcher.
+
+Two entry modes:
+  --experiment <paper_exp>   run one of the paper's experiments on synthetic
+                             stand-in data (CPU-friendly; §4 of the paper)
+  --arch <id>                federated adversarial training of an assigned
+                             backbone at reduced scale (smoke-size by
+                             default; full scale only makes sense on TPU)
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --experiment toy_2d --K 20
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-2.7b --steps 40
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.core import FedGAN, FedGANConfig, GANTask, losses
+from repro.data import FederatedRounds, synthetic
+from repro.optim import Adam, SGD, constant, constant_ttur, equal_timescale, power_decay
+
+tmap = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# Paper experiment tasks
+# ---------------------------------------------------------------------------
+
+
+def toy2d_task():
+    from repro.models.gan_nets import Toy2DDiscriminator, Toy2DGenerator
+    G, D = Toy2DGenerator(theta0=0.5), Toy2DDiscriminator(psi0=0.5)
+
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": G.init(kg), "disc": D.init(kd)}
+
+    def disc_loss(params, batch, rng):
+        fake = jax.lax.stop_gradient(G.apply(params["gen"], batch["z"]))
+        return losses.ns_d_loss(D.apply(params["disc"], batch["x"]),
+                                D.apply(params["disc"], fake))
+
+    def gen_loss(params, batch, rng):
+        fake = G.apply(params["gen"], batch["z"])
+        return losses.ns_g_loss(D.apply(params["disc"], fake))
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+
+
+def mlp_gan_task(data_dim=2, latent=2, hidden=128):
+    from repro.models.gan_nets import MLPDiscriminator, MLPGenerator
+    G = MLPGenerator(latent_dim=latent, out_dim=data_dim, hidden=hidden)
+    D = MLPDiscriminator(in_dim=data_dim, hidden=hidden)
+
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": G.init(kg), "disc": D.init(kd)}
+
+    def disc_loss(params, batch, rng):
+        fake = jax.lax.stop_gradient(G.apply(params["gen"], batch["z"]))
+        return losses.ns_d_loss(D.apply(params["disc"], batch["x"]),
+                                D.apply(params["disc"], fake))
+
+    def gen_loss(params, batch, rng):
+        fake = G.apply(params["gen"], batch["z"])
+        return losses.ns_g_loss(D.apply(params["disc"], fake))
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+
+
+def acgan_task(hw=16, channels=3, num_classes=10, latent=62):
+    from repro.models.gan_nets import ACGANDiscriminator, ACGANGenerator
+    G = ACGANGenerator(latent_dim=latent, num_classes=num_classes, image_hw=hw,
+                       channels=channels)
+    D = ACGANDiscriminator(num_classes=num_classes, image_hw=hw, channels=channels)
+
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": G.init(kg), "disc": D.init(kd)}
+
+    def disc_loss(params, batch, rng):
+        img, lab, z = batch["x"], batch["y"], batch["z"]
+        fake = jax.lax.stop_gradient(G.apply(params["gen"], z, lab))
+        rb, rc = D.apply(params["disc"], img)
+        fb, fc = D.apply(params["disc"], fake)
+        return losses.acgan_d_loss(rb, fb, rc, fc, lab)
+
+    def gen_loss(params, batch, rng):
+        lab, z = batch["y"], batch["z"]
+        fake = G.apply(params["gen"], z, lab)
+        fb, fc = D.apply(params["disc"], fake)
+        return losses.acgan_g_loss(fb, fc, lab)
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+
+
+def cgan1d_task(seq_len=24, label_dim=5):
+    from repro.models.gan_nets import CGAN1DDiscriminator, CGAN1DGenerator
+    G = CGAN1DGenerator(seq_len=seq_len, label_dim=label_dim)
+    D = CGAN1DDiscriminator(seq_len=seq_len, label_dim=label_dim)
+
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": G.init(kg), "disc": D.init(kd)}
+
+    def disc_loss(params, batch, rng):
+        x, lab, z = batch["x"], batch["y"], batch["z"]
+        fake = jax.lax.stop_gradient(G.apply(params["gen"], z, lab))
+        return losses.ns_d_loss(D.apply(params["disc"], x, lab),
+                                D.apply(params["disc"], fake, lab))
+
+    def gen_loss(params, batch, rng):
+        lab, z = batch["y"], batch["z"]
+        fake = G.apply(params["gen"], z, lab)
+        return losses.ns_g_loss(D.apply(params["disc"], fake, lab))
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+
+
+# ---------------------------------------------------------------------------
+# Trainer loop (simulation mode: agents stacked on one host)
+# ---------------------------------------------------------------------------
+
+
+def train_fedgan(task, *, agent_data, agent_grid, K, steps, batch_size,
+                 scales, opt_d, opt_g, mode="fedgan", sample_extra=None,
+                 seed=0, log_every=1, ckpt_dir="", weights=None):
+    fed = FedGAN(task, FedGANConfig(agent_grid=agent_grid, sync_interval=K,
+                                    mode=mode),
+                 opt_g=opt_g, opt_d=opt_d, scales=scales, weights=weights)
+    state = fed.init_state(jax.random.key(seed))
+    rounds = FederatedRounds(agent_data, agent_grid, batch_size, K,
+                             sample_extra=sample_extra)
+    round_fn = jax.jit(fed.round)
+    rng = jax.random.key(seed + 1)
+    history = []
+    n_rounds = max(steps // K, 1)
+    t0 = time.time()
+    for r in range(n_rounds):
+        rng, rb = jax.random.split(rng)
+        batches, seeds = rounds.round_batches(rb)
+        state, metrics = round_fn(state, batches, seeds)
+        m = tmap(lambda x: float(jnp.mean(x)), metrics)
+        history.append(m)
+        if log_every and (r % log_every == 0 or r == n_rounds - 1):
+            print(f"round {r:5d}/{n_rounds} step {(r+1)*K:6d} "
+                  f"d_loss={m['d_loss']:.4f} g_loss={m['g_loss']:.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+        if ckpt_dir and (r + 1) % max(n_rounds // 4, 1) == 0:
+            save_checkpoint(ckpt_dir, state, step=(r + 1) * K,
+                            metadata={"round": r, "K": K})
+    return fed, state, history
+
+
+def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
+                   mode: str, ckpt_dir: str):
+    from repro.configs.paper_gans import ALL_EXPERIMENTS, optimizer_for, scales_for
+    exp = ALL_EXPERIMENTS[name]
+    K = K or exp.default_K
+    steps = steps or exp.iterations
+    B = exp.num_agents
+    rng = jax.random.key(seed)
+
+    if name == "toy_2d":
+        task, _ = toy2d_task()
+        agent_data = [{"x": synthetic.sample_2d_segment(
+            jax.random.fold_in(rng, i), 4096, i, B)} for i in range(B)]
+        extra = lambda r, s: {"z": jax.random.uniform(r, s, minval=-1, maxval=1)}
+    elif name == "mixed_gaussian":
+        task, _ = mlp_gan_task()
+        agent_data = [{"x": synthetic.sample_mixed_gaussian(
+            jax.random.fold_in(rng, i), 8192, mode_subset=[2 * i, 2 * i + 1])}
+            for i in range(B)]
+        extra = lambda r, s: {"z": jax.random.normal(r, s + (2,))}
+    elif name == "swiss_roll":
+        task, _ = mlp_gan_task()
+        agent_data = [{"x": synthetic.sample_swiss_roll(
+            jax.random.fold_in(rng, i), 8192,
+            t_range=(0.25 + 0.75 * i / B, 0.25 + 0.75 * (i + 1) / B))}
+            for i in range(B)]
+        extra = lambda r, s: {"z": jax.random.normal(r, s + (2,))}
+    elif name in ("image_acgan", "celeba_acgan"):
+        ncls = 16 if name == "celeba_acgan" else 10
+        task, _ = acgan_task(hw=16, num_classes=ncls)
+        per = max(ncls // B, 1)
+        def mk(i):
+            lab = jax.random.randint(jax.random.fold_in(rng, 100 + i), (2048,),
+                                     i * per, min((i + 1) * per, ncls))
+            img = synthetic.sample_class_images(
+                jax.random.fold_in(rng, 200 + i), 2048, lab, hw=16,
+                num_classes=ncls)
+            return {"x": img, "y": lab}
+        agent_data = [mk(i) for i in range(B)]
+        extra = lambda r, s: {"z": jax.random.normal(r, s + (62,))}
+    elif name == "timeseries_cgan":
+        task, _ = cgan1d_task()
+        def mk(i):
+            cz = jnp.full((4096,), i, jnp.int32)
+            x = synthetic.sample_household_load(jax.random.fold_in(rng, i), 4096,
+                                                climate_zone=cz)
+            return {"x": x, "y": jax.nn.one_hot(cz, 5)}
+        agent_data = [mk(i) for i in range(B)]
+        extra = lambda r, s: {"z": jax.random.normal(r, s + (24,))}
+    else:
+        raise KeyError(name)
+
+    opt_d, opt_g = optimizer_for(exp)
+    fed, state, hist = train_fedgan(
+        task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
+        batch_size=exp.batch_size, scales=scales_for(exp), opt_d=opt_d,
+        opt_g=opt_g, mode=mode, sample_extra=extra, seed=seed,
+        log_every=max((steps // K) // 10, 1), ckpt_dir=ckpt_dir)
+    return fed, state, hist
+
+
+def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int):
+    """Federated adversarial training of a reduced assigned backbone."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_lm_gan_task
+    cfg = get_config(arch).smoke()
+    task = make_lm_gan_task(cfg)
+    B = 4
+    T = 32
+    rng = jax.random.key(seed)
+    agent_data = []
+    for i in range(B):
+        d = {"tokens": synthetic.sample_agent_tokens(
+            rng, 256, T, cfg.vocab_size, agent=i, num_agents=B)}
+        if cfg.family == "audio":
+            d["frames"] = 0.1 * jax.random.normal(
+                jax.random.fold_in(rng, 50 + i), (256, cfg.encoder_seq, cfg.d_model))
+        agent_data.append(d)
+    fed, state, hist = train_fedgan(
+        task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
+        batch_size=8, scales=equal_timescale(constant(1e-3)),
+        opt_d=Adam(), opt_g=Adam(), seed=seed, log_every=1)
+    return fed, state, hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--experiment", default="")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--K", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--mode", default="fedgan")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    if args.experiment:
+        run_experiment(args.experiment, K=args.K or None, steps=args.steps or None,
+                       seed=args.seed, mode=args.mode, ckpt_dir=args.ckpt_dir)
+    elif args.arch:
+        run_arch_smoke(args.arch, steps=args.steps or 20, K=args.K or 5,
+                       seed=args.seed)
+    else:
+        ap.error("need --experiment or --arch")
+
+
+if __name__ == "__main__":
+    main()

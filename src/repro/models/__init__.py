@@ -1,0 +1,17 @@
+from repro.models.adversarial import AdversarialLM, FeatureDiscriminator
+from repro.models.config import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    ArchConfig,
+    ShapeConfig,
+)
+from repro.models.transformer import Backbone
+
+__all__ = [
+    "AdversarialLM", "ArchConfig", "Backbone", "FeatureDiscriminator",
+    "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K",
+]

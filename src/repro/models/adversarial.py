@@ -1,0 +1,132 @@
+"""Adversarial pair for backbone LMs — the FedGAN train_4k step operand.
+
+Each agent holds (G = assigned backbone, D = compact transformer encoder).
+The discriminator scores *feature sequences* in the generator's embedding
+space (real path: embed(real tokens); fake path: G's final hidden states) —
+this keeps the (B, T, vocab) softmax out of the feature path, which matters
+at 262k vocab.  G's total loss = LM cross-entropy (the ACGAN-style auxiliary
+task the paper uses) + non-saturating adversarial term.
+
+This module only defines the models + losses; the federated update schedule
+lives in repro.core.fedgan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.dist.sharding import batch_spec, shard
+from repro.models.config import ArchConfig
+from repro.models.layers import Attention, SwiGLU, make_norm
+from repro.models.transformer import Backbone, stack_init
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureDiscriminator(nn.Module):
+    """Bidirectional transformer encoder over (B, T, d_model) features ->
+    per-sequence real/fake logit + auxiliary class logits (unused for LM)."""
+
+    cfg: ArchConfig
+
+    def _dcfg(self) -> ArchConfig:
+        c = self.cfg
+        return c.scaled(
+            d_model=c.disc_d_model, num_heads=c.disc_heads,
+            num_kv_heads=c.disc_heads, head_dim=c.disc_d_model // c.disc_heads,
+            d_ff=4 * c.disc_d_model, num_experts=0, sliding_window=0,
+            local_global_ratio=0, qk_norm=False)
+
+    def _block(self):
+        from repro.models.transformer import DecoderBlock
+        return DecoderBlock(self._dcfg(), causal=False)
+
+    def init(self, rng):
+        c = self.cfg
+        dc = self._dcfg()
+        k_in, k_blocks, k_norm, k_head = jax.random.split(rng, 4)
+        return {
+            "proj_in": nn.Dense(c.d_model, dc.d_model, use_bias=False,
+                                dtype=c.param_dtype).init(k_in),
+            "blocks": stack_init(self._block(), k_blocks, c.disc_layers),
+            "norm": make_norm(dc, dc.d_model).init(k_norm),
+            "head": nn.Dense(dc.d_model, 1, dtype=c.param_dtype).init(k_head),
+        }
+
+    def apply(self, params, feats):
+        """feats: (B, T, d_model) -> (B,) real/fake logits."""
+        c = self.cfg
+        dc = self._dcfg()
+        h = (feats.astype(c.dtype) @ params["proj_in"]["w"].astype(c.dtype))
+        h = shard(h, *batch_spec(None, None))
+        block = self._block()
+
+        def body(carry, bp):
+            hh, _ = block.apply(bp, carry, window=None)
+            return hh, None
+
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        h = make_norm(dc, dc.d_model).apply(params["norm"], h)
+        pooled = jnp.mean(h.astype(jnp.float32), axis=1)
+        logit = pooled @ params["head"]["w"].astype(jnp.float32)
+        logit = logit + params["head"]["b"].astype(jnp.float32)
+        return logit[..., 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversarialLM(nn.Module):
+    """The (G, D) pair.  params = {"gen": ..., "disc": ...}."""
+
+    cfg: ArchConfig
+    use_flash: bool = False
+    adv_weight: float = 0.1
+
+    @property
+    def generator(self) -> Backbone:
+        return Backbone(self.cfg, use_flash=self.use_flash)
+
+    @property
+    def discriminator(self) -> FeatureDiscriminator:
+        return FeatureDiscriminator(self.cfg)
+
+    def init(self, rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": self.generator.init(kg), "disc": self.discriminator.init(kd)}
+
+    # ---- feature extraction ----
+    def real_features(self, gen_params, tokens):
+        emb = nn.Embedding(self.cfg.padded_vocab, self.cfg.d_model).apply(
+            gen_params["embed"], tokens)
+        return emb.astype(self.cfg.dtype)
+
+    def fake_features(self, gen_params, tokens, encoder_frames=None):
+        out = self.generator.apply(gen_params, tokens,
+                                   encoder_frames=encoder_frames)
+        return out["hidden"], out["logits"], out["aux"]
+
+    # ---- losses ----
+    def lm_loss(self, logits, tokens):
+        """Next-token cross entropy (teacher forcing)."""
+        tgt = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    def disc_loss(self, disc_params, real_feats, fake_feats):
+        """Non-saturating GAN loss for D (features are stop-gradient'd)."""
+        d = self.discriminator
+        lr_ = d.apply(disc_params, jax.lax.stop_gradient(real_feats))
+        lf_ = d.apply(disc_params, jax.lax.stop_gradient(fake_feats))
+        loss = jnp.mean(jax.nn.softplus(-lr_)) + jnp.mean(jax.nn.softplus(lf_))
+        return loss
+
+    def gen_loss(self, gen_params, disc_params, tokens, encoder_frames=None):
+        """LM CE + adversarial (fool D) + MoE router aux."""
+        fake, logits, aux = self.fake_features(gen_params, tokens, encoder_frames)
+        lm = self.lm_loss(logits, tokens)
+        adv = jnp.mean(jax.nn.softplus(-self.discriminator.apply(disc_params, fake)))
+        total = lm + self.adv_weight * adv + self.cfg.router_aux_weight * aux
+        return total, {"lm": lm, "adv": adv, "aux": aux, "fake_feats": fake}

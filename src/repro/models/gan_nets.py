@@ -1,0 +1,240 @@
+"""The paper's experiment networks.
+
+- 2D system (Appendix C / Nagarajan & Kolter):  D(x) = psi * x^2,  G(z) = theta * z.
+- MLP GAN for mixed-Gaussian / Swiss-roll (Kodali et al. DRAGAN nets).
+- ACGAN conv nets for the image experiments (Odena et al., Table 1/2).
+- CGAN with stacked 1-D convs for the time-series experiments (Table 3).
+
+All are repro.nn Modules so FedGAN's parameter averaging applies uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+
+
+# ---------------------------------------------------------------------------
+# 2D system: scalar generator/discriminator (exactly the paper's toy)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Toy2DGenerator(nn.Module):
+    """G(z) = theta * z, z ~ U[-1, 1]."""
+
+    theta0: float = 0.1
+
+    def init(self, rng):
+        return {"theta": jnp.asarray(self.theta0, jnp.float32)}
+
+    def apply(self, params, z):
+        return params["theta"] * z
+
+
+@dataclasses.dataclass(frozen=True)
+class Toy2DDiscriminator(nn.Module):
+    """D(x) = psi * x^2 (the paper uses the quadratic discriminator)."""
+
+    psi0: float = 0.1
+
+    def init(self, rng):
+        return {"psi": jnp.asarray(self.psi0, jnp.float32)}
+
+    def apply(self, params, x):
+        return params["psi"] * jnp.square(x)
+
+
+# ---------------------------------------------------------------------------
+# MLP GAN (mixed Gaussian / Swiss roll)
+# ---------------------------------------------------------------------------
+
+
+def _mlp(sizes, final_act=None):
+    layers = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        layers.append(nn.Dense(a, b))
+        if i < len(sizes) - 2:
+            layers.append(jax.nn.relu)
+    if final_act is not None:
+        layers.append(final_act)
+    return nn.Sequential(layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPGenerator(nn.Module):
+    latent_dim: int = 2
+    out_dim: int = 2
+    hidden: int = 128
+    depth: int = 3
+
+    def _net(self):
+        return _mlp([self.latent_dim] + [self.hidden] * self.depth + [self.out_dim])
+
+    def init(self, rng):
+        return self._net().init(rng)
+
+    def apply(self, params, z):
+        return self._net().apply(params, z)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPDiscriminator(nn.Module):
+    in_dim: int = 2
+    hidden: int = 128
+    depth: int = 3
+
+    def _net(self):
+        return _mlp([self.in_dim] + [self.hidden] * self.depth + [1])
+
+    def init(self, rng):
+        return self._net().init(rng)
+
+    def apply(self, params, x):
+        return self._net().apply(params, x)[..., 0]  # logits
+
+
+# ---------------------------------------------------------------------------
+# ACGAN conv nets (paper Table 1, CIFAR-10 / MNIST layout, NHWC)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ACGANGenerator(nn.Module):
+    """z (latent) + class label -> image.  Table 1: Linear 1024 -> Linear
+    128*(H/4)*(W/4) -> convT 64 -> convT C, BN+ReLU, tanh output."""
+
+    latent_dim: int = 62
+    num_classes: int = 10
+    image_hw: int = 32
+    channels: int = 3
+    base: int = 128
+
+    def _seed_hw(self):
+        return self.image_hw // 4
+
+    def init(self, rng):
+        k = jax.random.split(rng, 8)
+        s = self._seed_hw()
+        in_dim = self.latent_dim + self.num_classes
+        return {
+            "fc1": nn.Dense(in_dim, 1024).init(k[0]),
+            "bn1": nn.BatchNorm(1024).init(k[1]),
+            "fc2": nn.Dense(1024, self.base * s * s).init(k[2]),
+            "bn2": nn.BatchNorm(self.base * s * s).init(k[3]),
+            "ct1": nn.ConvTranspose2D(self.base, 64).init(k[4]),
+            "bn3": nn.BatchNorm(64).init(k[5]),
+            "ct2": nn.ConvTranspose2D(64, self.channels).init(k[6]),
+        }
+
+    def apply(self, params, z, labels):
+        oh = jax.nn.one_hot(labels, self.num_classes)
+        h = jnp.concatenate([z, oh], axis=-1)
+        h = jax.nn.relu(nn.BatchNorm(1024).apply(
+            params["bn1"], h @ params["fc1"]["w"] + params["fc1"]["b"]))
+        h = jax.nn.relu(nn.BatchNorm(1).apply(
+            params["bn2"], h @ params["fc2"]["w"] + params["fc2"]["b"]))
+        s = self._seed_hw()
+        h = h.reshape(-1, s, s, self.base)
+        h = jax.nn.relu(nn.BatchNorm(64).apply(
+            params["bn3"], nn.ConvTranspose2D(self.base, 64).apply(params["ct1"], h)))
+        img = jnp.tanh(nn.ConvTranspose2D(64, self.channels).apply(params["ct2"], h))
+        return img
+
+
+@dataclasses.dataclass(frozen=True)
+class ACGANDiscriminator(nn.Module):
+    """Table 1 D: conv 64 -> conv 128(BN) -> Linear 1024(BN) -> heads
+    (binary real/fake logit + aux class logits)."""
+
+    num_classes: int = 10
+    image_hw: int = 32
+    channels: int = 3
+
+    def init(self, rng):
+        k = jax.random.split(rng, 8)
+        s = self.image_hw // 4
+        return {
+            "c1": nn.Conv2D(self.channels, 64).init(k[0]),
+            "c2": nn.Conv2D(64, 128).init(k[1]),
+            "bn2": nn.BatchNorm(128).init(k[2]),
+            "fc": nn.Dense(128 * s * s, 1024).init(k[3]),
+            "bn3": nn.BatchNorm(1024).init(k[4]),
+            "head_bin": nn.Dense(1024, 1).init(k[5]),
+            "head_cls": nn.Dense(1024, self.num_classes).init(k[6]),
+        }
+
+    def apply(self, params, img):
+        lrelu = nn.leaky_relu(0.2)
+        h = lrelu(nn.Conv2D(self.channels, 64).apply(params["c1"], img))
+        h = lrelu(nn.BatchNorm(128).apply(params["bn2"],
+                                          nn.Conv2D(64, 128).apply(params["c2"], h)))
+        h = h.reshape(h.shape[0], -1)
+        h = lrelu(nn.BatchNorm(1024).apply(params["bn3"],
+                                           h @ params["fc"]["w"] + params["fc"]["b"]))
+        logit = (h @ params["head_bin"]["w"] + params["head_bin"]["b"])[..., 0]
+        cls = h @ params["head_cls"]["w"] + params["head_cls"]["b"]
+        return logit, cls
+
+
+# ---------------------------------------------------------------------------
+# CGAN with 1-D convs (time-series, paper Table 3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CGAN1DGenerator(nn.Module):
+    """(label, noise) channels x 24 steps -> 24-step profile.
+    Table 3: conv1d(5,64) x ~8 with ReLU, then conv1d(1,1)."""
+
+    seq_len: int = 24
+    label_dim: int = 4
+    hidden: int = 64
+    depth: int = 8
+
+    def _layers(self):
+        chans = self.label_dim + 1
+        layers = [nn.Conv1D(chans, self.hidden)]
+        for _ in range(self.depth):
+            layers += [jax.nn.relu, nn.Conv1D(self.hidden, self.hidden)]
+        layers += [jax.nn.relu, nn.Conv1D(self.hidden, 1, kernel=1)]
+        return nn.Sequential(layers)
+
+    def init(self, rng):
+        return self._layers().init(rng)
+
+    def apply(self, params, z, labels):
+        # z: (B, T); labels: (B, label_dim) broadcast along time
+        lab = jnp.broadcast_to(labels[:, None, :], (z.shape[0], self.seq_len, self.label_dim))
+        x = jnp.concatenate([z[..., None], lab], axis=-1)
+        return self._layers().apply(params, x)[..., 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class CGAN1DDiscriminator(nn.Module):
+    seq_len: int = 24
+    label_dim: int = 4
+    hidden: int = 64
+    depth: int = 8
+
+    def _layers(self):
+        chans = self.label_dim + 1
+        layers = [nn.Conv1D(chans, self.hidden)]
+        for _ in range(self.depth):
+            layers += [jax.nn.relu, nn.Conv1D(self.hidden, self.hidden)]
+        return nn.Sequential(layers)
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {"conv": self._layers().init(k1),
+                "head": nn.Dense(self.hidden, 1).init(k2)}
+
+    def apply(self, params, x, labels):
+        lab = jnp.broadcast_to(labels[:, None, :], (x.shape[0], self.seq_len, self.label_dim))
+        h = jnp.concatenate([x[..., None], lab], axis=-1)
+        h = self._layers().apply(params["conv"], h)
+        h = jnp.mean(h, axis=1)  # pool over time
+        return (h @ params["head"]["w"] + params["head"]["b"])[..., 0]

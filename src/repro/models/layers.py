@@ -1,0 +1,289 @@
+"""Transformer building blocks: RoPE, GQA attention (full / sliding-window /
+cache-decode), SwiGLU, norms.  All modules follow the repro.nn init/apply
+convention and carry explicit sharding constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.dist.sharding import batch_spec, shard
+from repro.models.config import ArchConfig
+
+NEG_INF = -2.0 ** 30  # large-but-finite mask value (NaN-safe under softmax)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    angles = angles[..., None, :]                     # (..., T, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norm factory
+# ---------------------------------------------------------------------------
+
+def make_norm(cfg: ArchConfig, dim: int) -> nn.Module:
+    if cfg.norm == "layernorm":
+        return nn.LayerNorm(dim, dtype=cfg.param_dtype)
+    return nn.RMSNorm(dim, dtype=cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention(nn.Module):
+    """Grouped-query attention with RoPE, optional qk-norm and sliding window.
+
+    Modes:
+      full-sequence  apply(params, x, *, window, positions, causal) -> y
+      decode         decode(params, x1, cache, index, *, window) -> y1, cache'
+    KV cache layout: (B, S, n_kv, head_dim) per layer (stacked outside).
+    """
+
+    cfg: ArchConfig
+    causal: bool = True
+    use_flash: bool = False  # route full-seq path through the Pallas kernel
+
+    @property
+    def dims(self):
+        c = self.cfg
+        hd = c.resolved_head_dim
+        return c.num_heads, c.num_kv_heads, hd
+
+    def init(self, rng):
+        c = self.cfg
+        nh, nkv, hd = self.dims
+        kq, kk, kv, ko, kn1, kn2 = jax.random.split(rng, 6)
+        d = c.d_model
+        p = {
+            "wq": nn.Dense(d, nh * hd, use_bias=False, dtype=c.param_dtype).init(kq),
+            "wk": nn.Dense(d, nkv * hd, use_bias=False, dtype=c.param_dtype).init(kk),
+            "wv": nn.Dense(d, nkv * hd, use_bias=False, dtype=c.param_dtype).init(kv),
+            "wo": nn.Dense(nh * hd, d, use_bias=False, dtype=c.param_dtype).init(ko),
+        }
+        if c.qk_norm:
+            p["q_norm"] = nn.RMSNorm(hd, dtype=c.param_dtype).init(kn1)
+            p["k_norm"] = nn.RMSNorm(hd, dtype=c.param_dtype).init(kn2)
+        return p
+
+    # -- shared projection helpers ------------------------------------------------
+    def _qkv(self, params, x, positions):
+        c = self.cfg
+        nh, nkv, hd = self.dims
+        B, T = x.shape[0], x.shape[1]
+        q = (x @ params["wq"]["w"].astype(c.dtype)).reshape(B, T, nh, hd)
+        k = (x @ params["wk"]["w"].astype(c.dtype)).reshape(B, T, nkv, hd)
+        v = (x @ params["wv"]["w"].astype(c.dtype)).reshape(B, T, nkv, hd)
+        if c.qk_norm:
+            q = nn.RMSNorm(hd).apply(params["q_norm"], q)
+            k = nn.RMSNorm(hd).apply(params["k_norm"], k)
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+        return q, k, v
+
+    # -- full-sequence (train / prefill) ------------------------------------------
+    def apply(self, params, x, *, window=None, positions=None,
+              memory=None, return_kv: bool = False):
+        """x: (B, T, d_model).  ``memory``: (B, S_enc, d) for cross-attention
+        (whisper decoder); when given, k/v come from memory and no mask/rope
+        asymmetry applies beyond standard cross-attn."""
+        c = self.cfg
+        nh, nkv, hd = self.dims
+        B, T, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(T)[None, :]
+
+        if memory is None:
+            q, k, v = self._qkv(params, x, positions)
+        else:
+            # cross-attention: queries from x, keys/values from memory
+            S = memory.shape[1]
+            q = (x @ params["wq"]["w"].astype(c.dtype)).reshape(B, T, nh, hd)
+            k = (memory @ params["wk"]["w"].astype(c.dtype)).reshape(B, S, nkv, hd)
+            v = (memory @ params["wv"]["w"].astype(c.dtype)).reshape(B, S, nkv, hd)
+
+        from repro.dist.sharding import shard_attn_qkv
+        q, k, v = shard_attn_qkv(q, k, v)
+
+        if (self.use_flash and memory is None and q.shape[1] == k.shape[1]
+                and isinstance(window, (int, type(None)))):
+            from repro.kernels.flash_attention import ops as flash_ops
+            y = flash_ops.flash_attention(
+                q, k, v, causal=self.causal, window=window or 0)
+        else:
+            y = self._sdpa(q, k, v, window=window, causal=self.causal and memory is None,
+                           q_positions=positions)
+        y = y.reshape(B, T, nh * hd)
+        y = y @ params["wo"]["w"].astype(c.dtype)
+        y = shard(y, *batch_spec(None, None))
+        if return_kv:
+            return y, {"k": k, "v": v}
+        return y
+
+    def _sdpa(self, q, k, v, *, window, causal, q_positions=None,
+              k_positions=None):
+        nh, nkv, hd = self.dims
+        group = nh // max(nkv, 1)
+        B, T = q.shape[0], q.shape[1]
+        S = k.shape[1]
+        qh = q.reshape(B, T, nkv, group, hd)
+        logits = jnp.einsum("btkgd,bskd->bkgts", qh, k).astype(jnp.float32)
+        logits *= 1.0 / math.sqrt(hd)
+        qpos = jnp.arange(T) if q_positions is None else q_positions[0]
+        kpos = jnp.arange(S) if k_positions is None else k_positions
+        mask = jnp.ones((T, S), dtype=bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:  # window may be a traced per-layer scalar
+            mask &= qpos[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        y = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+        return y.reshape(B, T, nh, hd)
+
+    # -- single-token decode against a KV cache -----------------------------------
+    def decode(self, params, x, cache, index, *, window=None, memory=None):
+        """x: (B, 1, d); cache: dict(k=(B,S,nkv,hd), v=...); index: scalar int —
+        the position being written.  Returns (y, new_cache)."""
+        c = self.cfg
+        nh, nkv, hd = self.dims
+        B = x.shape[0]
+        pos = jnp.full((B, 1), index, dtype=jnp.int32)
+
+        if memory is not None:
+            S = memory.shape[1]
+            q = (x @ params["wq"]["w"].astype(c.dtype)).reshape(B, 1, nh, hd)
+            k = (memory @ params["wk"]["w"].astype(c.dtype)).reshape(B, S, nkv, hd)
+            v = (memory @ params["wv"]["w"].astype(c.dtype)).reshape(B, S, nkv, hd)
+            y = self._decode_attend(q, k, v, jnp.ones((S,), bool))
+            y = (y.reshape(B, 1, nh * hd) @ params["wo"]["w"].astype(c.dtype))
+            return shard(y, *batch_spec(None, None)), cache
+
+        q, k1, v1 = self._qkv(params, x, pos)
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), index, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), index, axis=1)
+        kpos = jnp.arange(k.shape[1])
+        valid = kpos <= index
+        if window is not None:
+            valid &= kpos > index - window
+        y = self._decode_attend(q, k, v, valid)
+        y = y.reshape(B, 1, nh * hd) @ params["wo"]["w"].astype(c.dtype)
+        return shard(y, *batch_spec(None, None)), {"k": k, "v": v}
+
+    def build_memory_cache(self, params, memory):
+        """Precompute cross-attention k/v from encoder output (B, S_enc, d)."""
+        c = self.cfg
+        _, nkv, hd = self.dims
+        B, S, _ = memory.shape
+        k = (memory @ params["wk"]["w"].astype(c.dtype)).reshape(B, S, nkv, hd)
+        v = (memory @ params["wv"]["w"].astype(c.dtype)).reshape(B, S, nkv, hd)
+        return {"k": k, "v": v}
+
+    def decode_memory(self, params, x, mem_cache):
+        """Single-token cross-attention against a prebuilt memory cache."""
+        c = self.cfg
+        nh, nkv, hd = self.dims
+        B = x.shape[0]
+        S = mem_cache["k"].shape[1]
+        q = (x @ params["wq"]["w"].astype(c.dtype)).reshape(B, 1, nh, hd)
+        y = self._decode_attend(q, mem_cache["k"], mem_cache["v"], jnp.ones((S,), bool))
+        y = y.reshape(B, 1, nh * hd) @ params["wo"]["w"].astype(c.dtype)
+        return shard(y, *batch_spec(None, None))
+
+    def decode_ring(self, params, x, cache, index):
+        """Sliding-window decode on a ring-buffer cache of width W — the
+        cache read is O(W), not O(S): the structural win of windowed layers
+        for long-context serving.  cache: {k,v: (B,W,nkv,hd), pos: (W,) i32,
+        positions initialised to -1}."""
+        c = self.cfg
+        nh, nkv, hd = self.dims
+        B = x.shape[0]
+        W = cache["k"].shape[1]
+        posv = jnp.full((B, 1), index, dtype=jnp.int32)
+        q, k1, v1 = self._qkv(params, x, posv)
+        slot = jnp.mod(index, W)
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), slot, axis=1)
+        pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((1,), index, jnp.int32), slot, axis=0)
+        valid = (pos >= 0) & (pos <= index)
+        y = self._decode_attend(q, k, v, valid)
+        y = y.reshape(B, 1, nh * hd) @ params["wo"]["w"].astype(c.dtype)
+        return shard(y, *batch_spec(None, None)), {"k": k, "v": v, "pos": pos}
+
+    def _decode_attend(self, q, k, v, valid):
+        nh, nkv, hd = self.dims
+        group = nh // max(nkv, 1)
+        B = k.shape[0]
+        qh = q.reshape(B, nkv, group, hd)
+        logits = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(q.dtype)).astype(jnp.float32)
+        logits *= 1.0 / math.sqrt(hd)
+        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        y = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(q.dtype))
+        return y.reshape(B, 1, nh, hd)
+
+    def init_cache(self, batch: int, seq: int, dtype=None, *, ring: bool = False):
+        c = self.cfg
+        _, nkv, hd = self.dims
+        dt = dtype or c.dtype
+        cache = {
+            "k": jnp.zeros((batch, seq, nkv, hd), dt),
+            "v": jnp.zeros((batch, seq, nkv, hd), dt),
+        }
+        if ring:
+            cache["pos"] = jnp.full((seq,), -1, jnp.int32)
+        return cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SwiGLU(nn.Module):
+    cfg: ArchConfig
+    d_ff: int = 0
+
+    def init(self, rng):
+        c = self.cfg
+        ff = self.d_ff or c.d_ff
+        kg, ku, kd = jax.random.split(rng, 3)
+        return {
+            "w_gate": nn.Dense(c.d_model, ff, use_bias=False, dtype=c.param_dtype).init(kg),
+            "w_up": nn.Dense(c.d_model, ff, use_bias=False, dtype=c.param_dtype).init(ku),
+            "w_down": nn.Dense(ff, c.d_model, use_bias=False, dtype=c.param_dtype).init(kd),
+        }
+
+    def apply(self, params, x):
+        c = self.cfg
+        g = x @ params["w_gate"]["w"].astype(c.dtype)
+        u = x @ params["w_up"]["w"].astype(c.dtype)
+        h = jax.nn.silu(g) * u
+        h = shard(h, *batch_spec(None, "model"))
+        y = h @ params["w_down"]["w"].astype(c.dtype)
+        return shard(y, *batch_spec(None, None))

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based einsum
+dispatch (MaxText-style group-wise dispatch: tokens are routed within groups
+of ``moe_group_size`` so the one-hot dispatch tensor stays VMEM/HBM-sane).
+
+Expert weights are stacked (E, d_model, d_ff); the ``model`` mesh axis shards
+d_ff inside every expert (tensor-parallel experts — uniform across E, so the
+sync average of FedGAN treats expert params like any other leaf).
+A load-balance auxiliary loss (Switch-style) is returned alongside the output.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.dist.sharding import batch_spec, shard
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE(nn.Module):
+    cfg: ArchConfig
+
+    def init(self, rng):
+        c = self.cfg
+        E, d, f = c.num_experts, c.d_model, c.d_ff
+        kr, kg, ku, kd = jax.random.split(rng, 4)
+        lim = (6.0 / (d + f)) ** 0.5
+        return {
+            "router": {"w": 0.02 * jax.random.normal(kr, (d, E), c.param_dtype)},
+            "experts": {
+                "w_gate": jax.random.uniform(kg, (E, d, f), c.param_dtype, -lim, lim),
+                "w_up": jax.random.uniform(ku, (E, d, f), c.param_dtype, -lim, lim),
+                "w_down": jax.random.uniform(kd, (E, f, d), c.param_dtype, -lim, lim),
+            },
+        }
+
+    def apply(self, params, x):
+        """x: (B, T, d) -> (y, aux_loss)."""
+        c = self.cfg
+        E, k = c.num_experts, c.experts_per_token
+        B, T, d = x.shape
+        G = max(min(c.moe_group_size, T), 1)
+        n_groups = (B * T) // G
+        xt = x.reshape(n_groups, G, d)
+
+        logits = (xt @ params["router"]["w"].astype(c.dtype)).astype(jnp.float32)  # (n,G,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+
+        # top-k gating, renormalised over the chosen experts
+        gate_vals, gate_idx = jax.lax.top_k(probs, k)                      # (n,G,k)
+        gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+        # Switch-style load-balance loss over the group axis
+        me = jnp.mean(probs, axis=1)                                       # (n,E)
+        onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)            # (n,G,k,E)
+        ce = jnp.mean(jnp.sum(onehot, axis=2), axis=1)                     # (n,E) fraction routed
+        aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+        # capacity-based dispatch within each group
+        cap = int(max(1, (k * G * c.capacity_factor) // E))
+        # position of each (token, choice) in its expert's buffer
+        flat_idx = gate_idx                                                # (n,G,k)
+        expert_onehot = onehot                                             # (n,G,k,E)
+        # cumulative count per expert along the (G*k) routing order
+        flat = expert_onehot.reshape(n_groups, G * k, E)
+        pos_in_expert = jnp.cumsum(flat, axis=1) - flat                    # (n,G*k,E)
+        pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(n_groups, G, k)
+        pos = pos.astype(jnp.int32)
+        keep = pos < cap
+        gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+        # dispatch tensor: (n, G, E, cap)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=c.dtype)
+        disp = jnp.einsum("ngke,ngkc->ngec", onehot.astype(c.dtype), pos_oh)
+        comb = jnp.einsum("ngk,ngke,ngkc->ngec",
+                          gate_vals.astype(c.dtype), onehot.astype(c.dtype), pos_oh)
+
+        disp = shard(disp, *batch_spec(None, None, None))
+        expert_in = jnp.einsum("ngec,ngd->necd", disp, xt)                 # (n,E,cap,d)
+        expert_in = shard(expert_in, *batch_spec(None, None, None))
+
+        wg = params["experts"]["w_gate"].astype(c.dtype)
+        wu = params["experts"]["w_up"].astype(c.dtype)
+        wd = params["experts"]["w_down"].astype(c.dtype)
+        h = jax.nn.silu(jnp.einsum("necd,edf->necf", expert_in, wg))
+        h = h * jnp.einsum("necd,edf->necf", expert_in, wu)
+        h = shard(h, *batch_spec(None, None, "model"))
+        expert_out = jnp.einsum("necf,efd->necd", h, wd)                   # (n,E,cap,d)
+
+        y = jnp.einsum("ngec,necd->ngd", comb, expert_out)
+        y = y.reshape(B, T, d)
+        return shard(y, *batch_spec(None, None)), aux.astype(jnp.float32)

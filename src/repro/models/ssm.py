@@ -1,0 +1,183 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Full-sequence path uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk recurrent state pass); the inner chunk computation can route
+through the Pallas ``ssd_scan`` kernel.  Decode path is the O(1) recurrent
+update on a (heads, head_dim, state) SSM cache — this is what makes
+``long_500k`` decoding feasible for mamba2/zamba2.
+
+SPMD-friendliness (found via the dry-run HLO audit):
+  * separate z/x/B/C/dt projections — a packed in_proj whose split points
+    don't align with the "model"-axis shard boundaries forces
+    collective-permute resharding on every layer;
+  * the causal depthwise conv is implemented as k shift-and-accumulate
+    steps (elementwise ops partition trivially) instead of a grouped
+    lax.conv, which the SPMD partitioner handles poorly for channel-sharded
+    operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.dist.sharding import batch_spec, shard
+from repro.models.config import ArchConfig
+
+
+def causal_depthwise_conv(x, w):
+    """x: (B, T, C); w: (k, C) -> (B, T, C); y[t] = sum_j w[j] * x[t-k+1+j]."""
+    k = w.shape[0]
+    y = x * w[k - 1]
+    for j in range(k - 1):
+        shift = k - 1 - j
+        y = y + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]] * w[j]
+    return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Block(nn.Module):
+    cfg: ArchConfig
+    use_kernel: bool = False
+
+    @property
+    def dims(self):
+        c = self.cfg
+        d_in = c.d_inner
+        nh = c.resolved_ssm_heads
+        hd = d_in // nh
+        return d_in, nh, hd, c.ssm_state
+
+    def init(self, rng):
+        c = self.cfg
+        d_in, nh, hd, ds = self.dims
+        keys = jax.random.split(rng, 10)
+        dense = lambda o, k: nn.Dense(c.d_model, o, use_bias=False,
+                                      dtype=c.param_dtype).init(k)
+        return {
+            "z_proj": dense(d_in, keys[0]),
+            "x_proj": dense(d_in, keys[1]),
+            "b_proj": dense(ds, keys[2]),
+            "c_proj": dense(ds, keys[3]),
+            "dt_proj": dense(nh, keys[4]),
+            "conv": {
+                "x": 0.3 * jax.random.normal(keys[5], (c.conv_kernel, d_in), c.param_dtype),
+                "b": 0.3 * jax.random.normal(keys[6], (c.conv_kernel, ds), c.param_dtype),
+                "c": 0.3 * jax.random.normal(keys[7], (c.conv_kernel, ds), c.param_dtype),
+            },
+            "ssd": {
+                "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(c.param_dtype)),
+                "dt_bias": jnp.zeros((nh,), c.param_dtype),
+                "D": jnp.ones((nh,), c.param_dtype),
+            },
+            "norm": nn.RMSNorm(d_in, dtype=c.param_dtype).init(keys[8]),
+            "out_proj": nn.Dense(d_in, c.d_model, use_bias=False,
+                                 dtype=c.param_dtype).init(keys[9]),
+        }
+
+    # ------------------------------------------------------------------
+    def _project(self, params, u):
+        c = self.cfg
+        dt_ = c.dtype
+        z = u @ params["z_proj"]["w"].astype(dt_)
+        x = u @ params["x_proj"]["w"].astype(dt_)
+        Bm = u @ params["b_proj"]["w"].astype(dt_)
+        Cm = u @ params["c_proj"]["w"].astype(dt_)
+        dt = u @ params["dt_proj"]["w"].astype(dt_)
+        return z, x, Bm, Cm, dt
+
+    # ------------------------------------------------------------------
+    def apply(self, params, u, *, return_state: bool = False):
+        """Full-sequence forward.  u: (B, T, d_model) -> (B, T, d_model).
+        ``return_state=True`` additionally returns the decode cache."""
+        c = self.cfg
+        d_in, nh, hd, ds = self.dims
+        Bsz, T, _ = u.shape
+        z, x_raw, B_raw, C_raw, dt = self._project(params, u)
+        x = jax.nn.silu(causal_depthwise_conv(x_raw, params["conv"]["x"].astype(c.dtype)))
+        Bm = jax.nn.silu(causal_depthwise_conv(B_raw, params["conv"]["b"].astype(c.dtype)))
+        Cm = jax.nn.silu(causal_depthwise_conv(C_raw, params["conv"]["c"].astype(c.dtype)))
+        x = x.reshape(Bsz, T, nh, hd)
+        x = shard(x, *batch_spec(None, "model", None))
+
+        A = -jnp.exp(params["ssd"]["A_log"].astype(jnp.float32))           # (nh,)
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["ssd"]["dt_bias"].astype(jnp.float32))  # (B,T,nh)
+
+        from repro.kernels.ssd_scan.ref import ssd_ref
+        state = None
+        if return_state:
+            y, state = ssd_ref(x, dt, A, Bm, Cm, chunk=c.ssm_chunk,
+                               return_final_state=True)
+        elif self.use_kernel:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y = ssd_ops.ssd(x, dt, A, Bm, Cm, chunk=c.ssm_chunk)
+        else:
+            y = ssd_ref(x, dt, A, Bm, Cm, chunk=c.ssm_chunk)
+
+        y = y + x * params["ssd"]["D"].astype(c.dtype)[None, None, :, None]
+        y = y.reshape(Bsz, T, d_in)
+        y = nn.RMSNorm(d_in).apply(params["norm"], y) * jax.nn.silu(z)
+        out = y @ params["out_proj"]["w"].astype(c.dtype)
+        out = shard(out, *batch_spec(None, None))
+        if return_state:
+            k = c.conv_kernel
+            cache = {
+                "ssm": state,
+                "conv_x": _tail_window(x_raw, k - 1),
+                "conv_b": _tail_window(B_raw, k - 1),
+                "conv_c": _tail_window(C_raw, k - 1),
+            }
+            return out, cache
+        return out
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, dtype=None):
+        c = self.cfg
+        d_in, nh, hd, ds = self.dims
+        k = c.conv_kernel - 1
+        return {
+            "ssm": jnp.zeros((batch, nh, hd, ds), jnp.float32),
+            "conv_x": jnp.zeros((batch, k, d_in), c.dtype),
+            "conv_b": jnp.zeros((batch, k, ds), c.dtype),
+            "conv_c": jnp.zeros((batch, k, ds), c.dtype),
+        }
+
+    def decode(self, params, u, cache):
+        """Single-token recurrent step.  u: (B, 1, d_model)."""
+        c = self.cfg
+        d_in, nh, hd, ds = self.dims
+        Bsz = u.shape[0]
+        z, x_raw, B_raw, C_raw, dt = self._project(params, u)
+
+        def conv_step(raw, window, w):
+            win = jnp.concatenate([window, raw], axis=1)        # (B, k, C)
+            y = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, w.astype(c.dtype)))
+            return y[:, None, :], win[:, 1:, :]
+
+        x1, new_cx = conv_step(x_raw, cache["conv_x"], params["conv"]["x"])
+        B1, new_cb = conv_step(B_raw, cache["conv_b"], params["conv"]["b"])
+        C1, new_cc = conv_step(C_raw, cache["conv_c"], params["conv"]["c"])
+
+        x = x1.reshape(Bsz, nh, hd)
+        A = -jnp.exp(params["ssd"]["A_log"].astype(jnp.float32))
+        dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                              + params["ssd"]["dt_bias"].astype(jnp.float32))  # (B,nh)
+        from repro.kernels.ssd_scan.ref import ssd_decode_ref
+        y, state = ssd_decode_ref(cache["ssm"], x, dtv, A, B1[:, 0, :], C1[:, 0, :])
+        y = y + x * params["ssd"]["D"].astype(c.dtype)[None, :, None]
+        y = y.reshape(Bsz, 1, d_in)
+        y = nn.RMSNorm(d_in).apply(params["norm"], y) * jax.nn.silu(z)
+        out = y @ params["out_proj"]["w"].astype(c.dtype)
+        return out, {"ssm": state, "conv_x": new_cx, "conv_b": new_cb,
+                     "conv_c": new_cc}
+
+
+def _tail_window(x, k: int):
+    """Last k steps of (B, T, C), zero-padded on the left if T < k."""
+    T = x.shape[1]
+    if T >= k:
+        return x[:, T - k:, :]
+    return jnp.pad(x, ((0, 0), (k - T, 0), (0, 0)))

@@ -1,0 +1,636 @@
+"""Backbone model: one composable definition covering every assigned family.
+
+Families
+  dense / vlm : scanned decoder blocks (uniform window, or grouped
+                local:global pattern à la gemma3)
+  moe         : decoder blocks with MoE FFN (+ router aux loss)
+  ssm         : scanned Mamba2 blocks (attention-free)
+  hybrid      : zamba2-style — Mamba2 stacks with a *shared* transformer
+                block applied every ``hybrid_period`` blocks
+  audio       : whisper-style enc-dec; conv/mel frontend is a stub — the
+                encoder consumes precomputed frame embeddings
+
+Entry points (all pure):
+  init(rng) -> params
+  apply(params, tokens, ...)            # full-sequence train forward
+  prefill(params, tokens, ...)          # forward + decode-cache build
+  init_cache(batch, seq)                # zeroed decode cache
+  decode(params, token, cache, index)   # ONE-token serve step
+
+Layer stacks are `lax.scan`ned over stacked params so the lowered HLO stays
+compact for the 512-device dry-run; `cfg.remat` wraps scan bodies in
+jax.checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.dist.sharding import batch_spec, shard
+from repro.models.config import ArchConfig
+from repro.models.layers import Attention, SwiGLU, make_norm
+from repro.models.moe import MoE
+from repro.models.ssm import Mamba2Block
+
+
+def _pad_attn_cache(cache, extra: int):
+    """Right-pad the sequence axis (-3) of attention k/v buffers; cross-attn
+    memory caches and SSM/conv state are untouched."""
+
+    def walk(tree, under_cross=False):
+        if isinstance(tree, dict):
+            return {
+                k: (walk(v, under_cross or k == "cross")
+                    if isinstance(v, dict)
+                    else (_pad_leaf(k, v, extra) if not under_cross else v))
+                for k, v in tree.items()
+            }
+        return tree
+
+    def _pad_leaf(key, leaf, n):
+        if key in ("k", "v") and leaf.ndim >= 3:
+            pad = [(0, 0)] * leaf.ndim
+            pad[-3] = (0, n)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    return walk(cache)
+
+
+def stack_init(module: nn.Module, rng, n: int):
+    """Stack n independent inits along a leading layer axis (for lax.scan)."""
+    keys = jax.random.split(rng, max(n, 1))
+    return jax.vmap(module.init)(keys)
+
+
+def stack_init2(module: nn.Module, rng, n_outer: int, n_inner: int):
+    keys = jax.random.split(rng, max(n_outer * n_inner, 1)).reshape(n_outer, n_inner)
+    return jax.vmap(jax.vmap(module.init))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Decoder block: attention + (SwiGLU | MoE), optional cross-attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderBlock(nn.Module):
+    cfg: ArchConfig
+    use_moe: bool = False
+    cross: bool = False
+    causal: bool = True
+    use_flash: bool = False
+
+    @property
+    def attn(self):
+        return Attention(self.cfg, causal=self.causal, use_flash=self.use_flash)
+
+    @property
+    def mlp(self):
+        return MoE(self.cfg) if self.use_moe else SwiGLU(self.cfg)
+
+    def init(self, rng):
+        keys = jax.random.split(rng, 6)
+        c = self.cfg
+        p = {
+            "ln1": make_norm(c, c.d_model).init(keys[0]),
+            "attn": self.attn.init(keys[1]),
+            "ln2": make_norm(c, c.d_model).init(keys[2]),
+            "mlp": self.mlp.init(keys[3]),
+        }
+        if self.cross:
+            p["lnx"] = make_norm(c, c.d_model).init(keys[4])
+            p["xattn"] = Attention(self.cfg, causal=False).init(keys[5])
+        return p
+
+    def _norm(self):
+        return make_norm(self.cfg, self.cfg.d_model)
+
+    def apply(self, params, h, *, window=None, memory=None, return_kv=False):
+        norm = self._norm()
+        a = self.attn.apply(params["attn"], norm.apply(params["ln1"], h),
+                            window=window, return_kv=return_kv)
+        if return_kv:
+            a, kv = a
+        h = h + a
+        if self.cross:
+            x = Attention(self.cfg, causal=False).apply(
+                params["xattn"], norm.apply(params["lnx"], h), memory=memory)
+            h = h + x
+        m = self.mlp.apply(params["mlp"], norm.apply(params["ln2"], h))
+        aux = jnp.float32(0.0)
+        if self.use_moe:
+            m, aux = m
+        h = h + m
+        if return_kv:
+            return h, aux, kv
+        return h, aux
+
+    def decode(self, params, h, cache, index, *, window=None, ring=False,
+               mem_cache=None):
+        norm = self._norm()
+        x = norm.apply(params["ln1"], h)
+        if ring:
+            a, new_cache = self.attn.decode_ring(params["attn"], x, cache, index)
+        else:
+            a, new_cache = self.attn.decode(params["attn"], x, cache, index,
+                                            window=window)
+        h = h + a
+        if self.cross and mem_cache is not None:
+            xq = norm.apply(params["lnx"], h)
+            h = h + Attention(self.cfg, causal=False).decode_memory(
+                params["xattn"], xq, mem_cache)
+        m = self.mlp.apply(params["mlp"], norm.apply(params["ln2"], h))
+        if self.use_moe:
+            m, _ = m
+        return h + m, new_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaLayer(nn.Module):
+    """Pre-norm residual wrapper around Mamba2Block."""
+
+    cfg: ArchConfig
+    use_kernel: bool = False
+
+    @property
+    def inner(self):
+        return Mamba2Block(self.cfg, use_kernel=self.use_kernel)
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {"ln": make_norm(self.cfg, self.cfg.d_model).init(k1),
+                "mixer": self.inner.init(k2)}
+
+    def apply(self, params, h, *, return_state=False):
+        norm = make_norm(self.cfg, self.cfg.d_model)
+        y = self.inner.apply(params["mixer"], norm.apply(params["ln"], h),
+                             return_state=return_state)
+        if return_state:
+            y, state = y
+            return h + y, state
+        return h + y
+
+    def decode(self, params, h, cache):
+        norm = make_norm(self.cfg, self.cfg.d_model)
+        y, new_cache = self.inner.decode(params["mixer"],
+                                         norm.apply(params["ln"], h), cache)
+        return h + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Backbone(nn.Module):
+    cfg: ArchConfig
+    use_flash: bool = False
+    use_ssd_kernel: bool = False
+    ring_cache: bool = False  # sliding-window layers use O(W) ring buffers
+
+    # ---- structure helpers ----
+    @property
+    def grouped(self) -> bool:
+        return self.cfg.local_global_ratio > 0
+
+    @property
+    def n_groups(self) -> int:
+        c = self.cfg
+        if c.family == "hybrid":
+            return c.num_layers // c.hybrid_period
+        if self.grouped:
+            return c.num_layers // (c.local_global_ratio + 1)
+        return 0
+
+    @property
+    def n_tail(self) -> int:
+        c = self.cfg
+        if c.family == "hybrid":
+            return c.num_layers % c.hybrid_period
+        if self.grouped:
+            return c.num_layers % (c.local_global_ratio + 1)
+        return 0
+
+    def _block(self, causal=True, cross=False):
+        return DecoderBlock(self.cfg, use_moe=self.cfg.num_experts > 0,
+                            cross=cross, causal=causal, use_flash=self.use_flash)
+
+    def _mamba(self):
+        return MambaLayer(self.cfg, use_kernel=self.use_ssd_kernel)
+
+    def _maybe_remat(self, fn):
+        return jax.checkpoint(fn) if self.cfg.remat else fn
+
+    # ---- init ----
+    def init(self, rng):
+        c = self.cfg
+        k_embed, k_layers, k_norm, k_enc, k_shared, k_head = jax.random.split(rng, 6)
+        p: dict[str, Any] = {
+            "embed": nn.Embedding(c.padded_vocab, c.d_model, dtype=c.param_dtype).init(k_embed),
+            "final_norm": make_norm(c, c.d_model).init(k_norm),
+        }
+        if not c.tie_embeddings:
+            p["lm_head"] = nn.Dense(c.d_model, c.padded_vocab, use_bias=False,
+                                    dtype=c.param_dtype).init(k_head)
+        if c.family == "ssm":
+            p["blocks"] = stack_init(self._mamba(), k_layers, c.num_layers)
+        elif c.family == "hybrid":
+            per = c.hybrid_period - 1
+            k_a, k_b = jax.random.split(k_layers)
+            p["shared_attn"] = self._block().init(k_shared)
+            p["mamba"] = stack_init2(self._mamba(), k_a, self.n_groups, per)
+            if self.n_tail:
+                p["mamba_tail"] = stack_init(self._mamba(), k_b, self.n_tail)
+        elif c.family == "audio":
+            k_d, k_e = jax.random.split(k_layers)
+            p["enc_blocks"] = stack_init(self._block(causal=False), k_e, c.encoder_layers)
+            p["enc_norm"] = make_norm(c, c.d_model).init(k_enc)
+            p["blocks"] = stack_init(self._block(cross=True), k_d, c.num_layers)
+        elif self.grouped:
+            ratio = c.local_global_ratio
+            k_l, k_g, k_t = jax.random.split(k_layers, 3)
+            p["local"] = stack_init2(self._block(), k_l, self.n_groups, ratio)
+            p["global"] = stack_init(self._block(), k_g, self.n_groups)
+            if self.n_tail:
+                p["tail"] = stack_init(self._block(), k_t, self.n_tail)
+        else:
+            p["blocks"] = stack_init(self._block(), k_layers, c.num_layers)
+        return p
+
+    # ---- embedding / head ----
+    def _embed(self, params, tokens):
+        c = self.cfg
+        h = nn.Embedding(c.padded_vocab, c.d_model).apply(params["embed"], tokens)
+        return shard(h.astype(c.dtype), *batch_spec(None, None))
+
+    def _head(self, params, h, *, logits_mode: str = "full"):
+        c = self.cfg
+        h = make_norm(c, c.d_model).apply(params["final_norm"], h)
+        if logits_mode == "none":
+            return h, None
+        hh = h[:, -1:] if logits_mode == "last" else h
+        if c.tie_embeddings:
+            logits = hh @ params["embed"]["table"].T.astype(c.dtype)
+        else:
+            logits = hh @ params["lm_head"]["w"].astype(c.dtype)
+        return h, shard(logits.astype(jnp.float32), *batch_spec(None, "model"))
+
+    # ---- full-sequence forward ----
+    def apply(self, params, tokens=None, *, embeddings=None, encoder_frames=None,
+              collect_cache: bool = False, logits_mode: str = "full"):
+        """Returns dict(hidden, logits, aux[, cache]).  ``logits_mode``:
+        "full" (training), "last" (prefill — only the next-token logits), or
+        "none"."""
+        c = self.cfg
+        h = embeddings if embeddings is not None else self._embed(params, tokens)
+        aux0 = jnp.float32(0.0)
+        caches: dict[str, Any] = {}
+
+        memory = None
+        if c.family == "audio":
+            memory = self.encode(params, encoder_frames)
+
+        if c.family == "ssm":
+            layer = self._mamba()
+
+            if collect_cache:
+                def body(carry, bp):
+                    hh, ssm_state = layer.apply(bp, carry, return_state=True)
+                    return hh, ssm_state
+            else:
+                def body(carry, bp):
+                    return layer.apply(bp, carry), None
+
+            h, states = jax.lax.scan(self._maybe_remat(body), h, params["blocks"])
+            if collect_cache:
+                caches["blocks"] = states
+        elif c.family == "hybrid":
+            h, aux0, hcaches = self._hybrid_forward(params, h, collect_cache)
+            if collect_cache:
+                g = hcaches.pop("groups")
+                caches.update({"attn": g["attn"], "mamba": g["mamba"], **hcaches})
+        elif c.family == "audio":
+            block = self._block(cross=True)
+
+            def body(carry, bp):
+                hh, aux = carry
+                out = block.apply(bp, hh, memory=memory, return_kv=collect_cache)
+                if collect_cache:
+                    hh, a, kv = out
+                    mem_kv = block.attn.build_memory_cache(bp["xattn"], memory)
+                    return (hh, aux + a), {"self": kv, "cross": mem_kv}
+                hh, a = out
+                return (hh, aux + a), None
+
+            (h, aux0), kvs = jax.lax.scan(self._maybe_remat(body), (h, aux0),
+                                          params["blocks"])
+            if collect_cache:
+                caches["self"] = kvs["self"]
+                caches["cross"] = kvs["cross"]
+        elif self.grouped:
+            h, aux0, gcaches = self._grouped_forward(params, h, collect_cache)
+            if collect_cache:
+                g = gcaches.pop("groups")
+                caches.update({"local": g["local"], "global": g["global"], **gcaches})
+        else:
+            block = self._block()
+            window = c.sliding_window if c.sliding_window > 0 else None
+
+            def body(carry, bp):
+                hh, aux = carry
+                out = block.apply(bp, hh, window=window, return_kv=collect_cache)
+                if collect_cache:
+                    hh, a, kv = out
+                    return (hh, aux + a), kv
+                hh, a = out
+                return (hh, aux + a), None
+
+            (h, aux0), kvs = jax.lax.scan(self._maybe_remat(body), (h, aux0),
+                                          params["blocks"])
+            if collect_cache:
+                caches["blocks"] = kvs
+
+        hidden, logits = self._head(params, h, logits_mode=logits_mode)
+        out = {"hidden": hidden, "logits": logits, "aux": aux0}
+        if collect_cache:
+            out["cache"] = caches
+            if memory is not None:
+                out["memory"] = memory
+        return out
+
+    def _grouped_forward(self, params, h, collect_cache):
+        """gemma3-style [ratio local + 1 global] groups + local tail."""
+        c = self.cfg
+        block = self._block()
+        W = c.sliding_window
+        gw = W if c.global_uses_window else None
+
+        def local_body(carry, bp):
+            hh, aux = carry
+            out = block.apply(bp, hh, window=W, return_kv=collect_cache)
+            if collect_cache:
+                hh, a, kv = out
+                return (hh, aux + a), kv
+            hh, a = out
+            return (hh, aux + a), None
+
+        def group_body(carry, xs):
+            lp, gp = xs
+            carry, lkv = jax.lax.scan(self._maybe_remat(local_body), carry, lp)
+            hh, aux = carry
+            out = block.apply(gp, hh, window=gw, return_kv=collect_cache)
+            if collect_cache:
+                hh, a, gkv = out
+                return (hh, aux + a), {"local": lkv, "global": gkv}
+            hh, a = out
+            return (hh, aux + a), None
+
+        carry = (h, jnp.float32(0.0))
+        carry, kvs = jax.lax.scan(group_body, carry,
+                                  (params["local"], params["global"]))
+        caches = {}
+        if collect_cache:
+            caches["groups"] = kvs
+        if self.n_tail:
+            carry, tkv = jax.lax.scan(self._maybe_remat(local_body), carry,
+                                      params["tail"])
+            if collect_cache:
+                caches["tail"] = tkv
+        h, aux = carry
+        return h, aux, caches
+
+    def _hybrid_forward(self, params, h, collect_cache):
+        """zamba2-style: every group = 1 shared-attn block + (period-1) mamba."""
+        c = self.cfg
+        block = self._block()
+        mamba = self._mamba()
+        shared = params["shared_attn"]
+
+        def mamba_body(carry, bp):
+            hh, aux = carry
+            if collect_cache:
+                hh, st = mamba.apply(bp, hh, return_state=True)
+                return (hh, aux), st
+            return (mamba.apply(bp, hh), aux), None
+
+        def group_body(carry, mp):
+            hh, aux = carry
+            out = block.apply(shared, hh, window=None, return_kv=collect_cache)
+            if collect_cache:
+                hh, a, kv = out
+            else:
+                hh, a = out
+                kv = None
+            carry, mstates = jax.lax.scan(self._maybe_remat(mamba_body),
+                                          (hh, aux + a), mp)
+            if collect_cache:
+                return carry, {"attn": kv, "mamba": mstates}
+            return carry, None
+
+        carry = (h, jnp.float32(0.0))
+        carry, kvs = jax.lax.scan(group_body, carry, params["mamba"])
+        caches = {}
+        if collect_cache:
+            caches["groups"] = kvs
+        if self.n_tail:
+            carry, tst = jax.lax.scan(self._maybe_remat(mamba_body), carry,
+                                      params["mamba_tail"])
+            if collect_cache:
+                caches["tail"] = tst
+        h, aux = carry
+        return h, aux, caches
+
+    # ---- encoder (audio) ----
+    def encode(self, params, frames):
+        """frames: (B, S_enc, d_model) — stubbed frontend embeddings."""
+        c = self.cfg
+        h = shard(frames.astype(c.dtype), *batch_spec(None, None))
+        block = self._block(causal=False)
+
+        def body(carry, bp):
+            hh, _ = block.apply(bp, carry, window=None)
+            return hh, None
+
+        h, _ = jax.lax.scan(self._maybe_remat(body), h, params["enc_blocks"])
+        return make_norm(c, c.d_model).apply(params["enc_norm"], h)
+
+    # ---- prefill ----
+    def prefill(self, params, tokens, *, encoder_frames=None, max_seq: int = 0,
+                logits_mode: str = "last"):
+        """Full forward + decode-cache build.  ``max_seq > T`` right-pads the
+        attention caches so `decode` can continue writing at index >= T."""
+        out = self.apply(params, tokens, encoder_frames=encoder_frames,
+                         collect_cache=True, logits_mode=logits_mode)
+        T = tokens.shape[1]
+        if max_seq and max_seq > T:
+            out["cache"] = _pad_attn_cache(out["cache"], max_seq - T)
+        return out
+
+    # ---- decode cache ----
+    def init_cache(self, batch: int, seq: int):
+        c = self.cfg
+        attn = Attention(c)
+        mamba = Mamba2Block(c)
+        W = min(c.sliding_window, seq) if c.sliding_window > 0 else seq
+        use_ring = self.ring_cache and c.sliding_window > 0
+
+        def kv(n_extra_dims_shape, width, ring):
+            base = attn.init_cache(batch, width, ring=ring)
+            for n in reversed(n_extra_dims_shape):
+                base = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (n,) + x.shape), base)
+            return base
+
+        if c.family == "ssm":
+            base = mamba.init_cache(batch)
+            return {"blocks": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (c.num_layers,) + x.shape), base)}
+        if c.family == "hybrid":
+            per = c.hybrid_period - 1
+            base = mamba.init_cache(batch)
+            cache = {
+                "attn": kv((self.n_groups,), seq, False),
+                "mamba": jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (self.n_groups, per) + x.shape), base),
+            }
+            if self.n_tail:
+                cache["tail"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (self.n_tail,) + x.shape), base)
+            return cache
+        if c.family == "audio":
+            enc_S = c.encoder_seq
+            nkv, hd = c.num_kv_heads, c.resolved_head_dim
+            return {
+                "self": kv((c.num_layers,), seq, False),
+                "cross": {
+                    "k": jnp.zeros((c.num_layers, batch, enc_S, nkv, hd), c.dtype),
+                    "v": jnp.zeros((c.num_layers, batch, enc_S, nkv, hd), c.dtype),
+                },
+            }
+        if self.grouped:
+            cache = {
+                "local": kv((self.n_groups, c.local_global_ratio),
+                            W if use_ring else seq, use_ring),
+                "global": kv((self.n_groups,),
+                             W if (use_ring and c.global_uses_window) else seq,
+                             use_ring and c.global_uses_window),
+            }
+            if self.n_tail:
+                cache["tail"] = kv((self.n_tail,), W if use_ring else seq, use_ring)
+            return cache
+        return {"blocks": kv((c.num_layers,), W if use_ring else seq, use_ring)}
+
+    # ---- one-token decode ----
+    def decode(self, params, token, cache, index):
+        """token: (B, 1) int32; index: scalar int32 position being generated.
+        Returns (logits (B,1,V), new_cache)."""
+        c = self.cfg
+        h = self._embed(params, token)
+        use_ring = self.ring_cache and c.sliding_window > 0
+        window = c.sliding_window if c.sliding_window > 0 else None
+
+        if c.family == "ssm":
+            mamba = self._mamba()
+
+            def body(carry, xs):
+                bp, lc = xs
+                hh, nc = mamba.decode(bp, carry, lc)
+                return hh, nc
+
+            h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": new_cache}
+        elif c.family == "hybrid":
+            h, new_cache = self._hybrid_decode(params, h, cache, index)
+        elif c.family == "audio":
+            block = self._block(cross=True)
+
+            def body(carry, xs):
+                bp, sc, cc = xs
+                hh, nc = block.decode(bp, carry, sc, index, mem_cache=cc)
+                return hh, nc
+
+            h, new_self = jax.lax.scan(
+                body, h, (params["blocks"], cache["self"], cache["cross"]))
+            new_cache = {"self": new_self, "cross": cache["cross"]}
+        elif self.grouped:
+            h, new_cache = self._grouped_decode(params, h, cache, index)
+        else:
+            block = self._block()
+
+            def body(carry, xs):
+                bp, lc = xs
+                if use_ring:
+                    hh, nc = block.decode(bp, carry, lc, index, ring=True)
+                else:
+                    hh, nc = block.decode(bp, carry, lc, index, window=window)
+                return hh, nc
+
+            h, new_blocks = jax.lax.scan(body, h, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": new_blocks}
+
+        _, logits = self._head(params, h)
+        return logits, new_cache
+
+    def _grouped_decode(self, params, h, cache, index):
+        c = self.cfg
+        block = self._block()
+        use_ring = self.ring_cache
+        gw = c.sliding_window if c.global_uses_window else None
+        g_ring = use_ring and c.global_uses_window
+
+        def local_body(carry, xs):
+            bp, lc = xs
+            if use_ring:
+                hh, nc = block.decode(bp, carry, lc, index, ring=True)
+            else:
+                hh, nc = block.decode(bp, carry, lc, index, window=c.sliding_window)
+            return hh, nc
+
+        def group_body(carry, xs):
+            lp, gp, lcache, gcache = xs
+            hh, lnew = jax.lax.scan(local_body, carry, (lp, lcache))
+            if g_ring:
+                hh, gnew = block.decode(gp, hh, gcache, index, ring=True)
+            else:
+                hh, gnew = block.decode(gp, hh, gcache, index, window=gw)
+            return hh, {"local": lnew, "global": gnew}
+
+        h, gnew = jax.lax.scan(group_body, h,
+                               (params["local"], params["global"],
+                                cache["local"], cache["global"]))
+        new_cache = {"local": gnew["local"], "global": gnew["global"]}
+        if self.n_tail:
+            h, tnew = jax.lax.scan(local_body, h, (params["tail"], cache["tail"]))
+            new_cache["tail"] = tnew
+        return h, new_cache
+
+    def _hybrid_decode(self, params, h, cache, index):
+        c = self.cfg
+        block = self._block()
+        mamba = self._mamba()
+        shared = params["shared_attn"]
+
+        def mamba_body(carry, xs):
+            bp, lc = xs
+            hh, nc = mamba.decode(bp, carry, lc)
+            return hh, nc
+
+        def group_body(carry, xs):
+            mp, acache, mcache = xs
+            hh, anew = block.decode(shared, carry, acache, index)
+            hh, mnew = jax.lax.scan(mamba_body, hh, (mp, mcache))
+            return hh, {"attn": anew, "mamba": mnew}
+
+        h, gnew = jax.lax.scan(group_body, h,
+                               (params["mamba"], cache["attn"], cache["mamba"]))
+        new_cache = {"attn": gnew["attn"], "mamba": gnew["mamba"]}
+        if self.n_tail:
+            h, tnew = jax.lax.scan(mamba_body, h, (params["mamba_tail"], cache["tail"]))
+            new_cache["tail"] = tnew
+        return h, new_cache

@@ -1,0 +1,26 @@
+from repro.nn.module import (
+    BatchNorm,
+    Conv1D,
+    Conv2D,
+    ConvTranspose2D,
+    Dense,
+    Embedding,
+    LayerNorm,
+    Module,
+    RMSNorm,
+    Sequential,
+    fan_in_init,
+    glorot_uniform,
+    leaky_relu,
+    normal_init,
+    param_bytes,
+    param_count,
+    truncated_normal_init,
+)
+
+__all__ = [
+    "BatchNorm", "Conv1D", "Conv2D", "ConvTranspose2D", "Dense", "Embedding",
+    "LayerNorm", "Module", "RMSNorm", "Sequential", "fan_in_init",
+    "glorot_uniform", "leaky_relu", "normal_init", "param_bytes",
+    "param_count", "truncated_normal_init",
+]

@@ -1,0 +1,298 @@
+"""Minimal functional module system.
+
+No flax/haiku in this container, so we build a tiny, explicit library:
+a Module is a pair of pure functions
+
+    params = module.init(rng)            # pytree of jnp arrays
+    out    = module.apply(params, *xs)   # pure function of (params, inputs)
+
+Modules compose structurally: ``Sequential``, dict-of-children, etc.  All
+state (batch-norm running stats are deliberately avoided -- we use
+batch statistics in training mode like the reference ACGAN code and a
+``train`` flag) lives in ``params`` so that FedGAN's weighted parameter
+averaging (the paper's eq. (2)) is a plain pytree map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of jnp arrays
+Array = jax.Array
+
+
+def _split(rng, n):
+    return jax.random.split(rng, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Module:
+    """Base class: subclasses provide init(rng) -> Params and apply(params, x)."""
+
+    def init(self, rng: Array) -> Params:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def apply(self, params: Params, *args, **kwargs):  # pragma: no cover
+        raise NotImplementedError
+
+    def __call__(self, params: Params, *args, **kwargs):
+        return self.apply(params, *args, **kwargs)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(p.size * p.dtype.itemsize) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def glorot_uniform(rng, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in = shape[in_axis]
+    fan_out = shape[out_axis]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(rng, shape, dtype, -limit, limit)
+
+
+def normal_init(stddev: float = 0.02):
+    def init(rng, shape, dtype=jnp.float32):
+        return stddev * jax.random.normal(rng, shape, dtype)
+
+    return init
+
+
+def truncated_normal_init(stddev: float = 0.02):
+    def init(rng, shape, dtype=jnp.float32):
+        return stddev * jax.random.truncated_normal(rng, -2.0, 2.0, shape, dtype)
+
+    return init
+
+
+def fan_in_init(rng, shape, dtype=jnp.float32):
+    """LeCun-normal: stddev = 1/sqrt(fan_in) with fan_in = prod(shape[:-1])."""
+    fan_in = 1
+    for s in shape[:-1]:
+        fan_in *= s
+    return jax.random.normal(rng, shape, dtype) / math.sqrt(max(fan_in, 1))
+
+
+# ---------------------------------------------------------------------------
+# core layers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense(Module):
+    in_dim: int
+    out_dim: int
+    use_bias: bool = True
+    dtype: Any = jnp.float32
+    init_fn: Callable = glorot_uniform
+
+    def init(self, rng):
+        kw, kb = _split(rng, 2)
+        p = {"w": self.init_fn(kw, (self.in_dim, self.out_dim), self.dtype)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_dim,), self.dtype)
+        return p
+
+    def apply(self, params, x):
+        y = x @ params["w"]
+        if self.use_bias:
+            y = y + params["b"]
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding(Module):
+    vocab: int
+    dim: int
+    dtype: Any = jnp.float32
+    stddev: float = 0.02
+
+    def init(self, rng):
+        return {"table": self.stddev * jax.random.normal(rng, (self.vocab, self.dim), self.dtype)}
+
+    def apply(self, params, ids):
+        return jnp.take(params["table"], ids, axis=0)
+
+    def attend(self, params, x):
+        """Tied-output logits: x @ table^T."""
+        return x @ params["table"].T
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm(Module):
+    dim: int
+    eps: float = 1e-5
+    use_bias: bool = True
+    dtype: Any = jnp.float32
+
+    def init(self, rng):
+        p = {"scale": jnp.ones((self.dim,), self.dtype)}
+        if self.use_bias:
+            p["bias"] = jnp.zeros((self.dim,), self.dtype)
+        return p
+
+    def apply(self, params, x):
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + self.eps) * params["scale"].astype(jnp.float32)
+        if self.use_bias:
+            y = y + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm(Module):
+    dim: int
+    eps: float = 1e-6
+    dtype: Any = jnp.float32
+
+    def init(self, rng):
+        return {"scale": jnp.ones((self.dim,), self.dtype)}
+
+    def apply(self, params, x):
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + self.eps).astype(x.dtype)
+        return y * params["scale"].astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchNorm(Module):
+    """Batch-statistics norm (training-mode BN, as in the paper's ACGAN nets).
+
+    We intentionally use per-batch statistics in both train and eval: FedGAN
+    averages *parameters*; carrying per-agent running stats would leak a
+    second state channel the paper does not model.
+    """
+
+    dim: int
+    eps: float = 1e-5
+    axis_name: str | None = None
+
+    def init(self, rng):
+        return {"scale": jnp.ones((self.dim,)), "bias": jnp.zeros((self.dim,))}
+
+    def apply(self, params, x):
+        axes = tuple(range(x.ndim - 1))
+        mu = jnp.mean(x, axis=axes, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=axes, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + self.eps)
+        return y * params["scale"] + params["bias"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2D(Module):
+    in_ch: int
+    out_ch: int
+    kernel: tuple[int, int] = (4, 4)
+    stride: tuple[int, int] = (2, 2)
+    padding: str = "SAME"
+    use_bias: bool = True
+
+    def init(self, rng):
+        kw, _ = _split(rng, 2)
+        shape = (*self.kernel, self.in_ch, self.out_ch)
+        p = {"w": fan_in_init(kw, shape)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_ch,))
+        return p
+
+    def apply(self, params, x):
+        # x: (B, H, W, C)
+        y = jax.lax.conv_general_dilated(
+            x, params["w"], window_strides=self.stride, padding=self.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if self.use_bias:
+            y = y + params["b"]
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTranspose2D(Module):
+    in_ch: int
+    out_ch: int
+    kernel: tuple[int, int] = (4, 4)
+    stride: tuple[int, int] = (2, 2)
+    padding: str = "SAME"
+    use_bias: bool = True
+
+    def init(self, rng):
+        kw, _ = _split(rng, 2)
+        shape = (*self.kernel, self.out_ch, self.in_ch)  # HWOI for transpose
+        p = {"w": fan_in_init(kw, shape)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_ch,))
+        return p
+
+    def apply(self, params, x):
+        y = jax.lax.conv_transpose(
+            x, params["w"], strides=self.stride, padding=self.padding,
+            dimension_numbers=("NHWC", "HWOI", "NHWC"))
+        if self.use_bias:
+            y = y + params["b"]
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv1D(Module):
+    in_ch: int
+    out_ch: int
+    kernel: int = 5
+    stride: int = 1
+    padding: str = "SAME"
+    use_bias: bool = True
+
+    def init(self, rng):
+        kw, _ = _split(rng, 2)
+        shape = (self.kernel, self.in_ch, self.out_ch)
+        p = {"w": fan_in_init(kw, shape)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_ch,))
+        return p
+
+    def apply(self, params, x):
+        # x: (B, T, C)
+        y = jax.lax.conv_general_dilated(
+            x, params["w"], window_strides=(self.stride,), padding=self.padding,
+            dimension_numbers=("NWC", "WIO", "NWC"))
+        if self.use_bias:
+            y = y + params["b"]
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Sequential(Module):
+    layers: Sequence[Any]  # mix of Modules and bare callables (activations)
+
+    def init(self, rng):
+        params = []
+        mods = [l for l in self.layers if isinstance(l, Module)]
+        keys = _split(rng, max(len(mods), 1))
+        ki = 0
+        for layer in self.layers:
+            if isinstance(layer, Module):
+                params.append(layer.init(keys[ki]))
+                ki += 1
+            else:
+                params.append({})
+        return params
+
+    def apply(self, params, x):
+        for layer, p in zip(self.layers, params):
+            x = layer.apply(p, x) if isinstance(layer, Module) else layer(x)
+        return x
+
+
+def leaky_relu(slope: float = 0.2):
+    return lambda x: jax.nn.leaky_relu(x, slope)

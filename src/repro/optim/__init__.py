@@ -1,0 +1,17 @@
+from repro.optim.optimizer import SGD, Adam, AdamW, Optimizer, clip_by_global_norm, global_norm
+from repro.optim.schedules import (
+    TimeScales,
+    constant,
+    constant_ttur,
+    equal_timescale,
+    inverse_time,
+    power_decay,
+    ttur_pair,
+    warmup_cosine,
+)
+
+__all__ = [
+    "SGD", "Adam", "AdamW", "Optimizer", "clip_by_global_norm", "global_norm",
+    "TimeScales", "constant", "constant_ttur", "equal_timescale",
+    "inverse_time", "power_decay", "ttur_pair", "warmup_cosine",
+]

@@ -1,0 +1,125 @@
+"""Optimizers as pure pytree transforms (no optax in this container).
+
+An optimizer is an ``Optimizer`` dataclass with
+
+    state = opt.init(params)
+    new_params, new_state = opt.update(params, grads, state, lr)
+
+``lr`` is passed per-call so the FedGAN driver can feed the paper's
+time-decaying a(n), b(n) schedules (assumption (A2)) and the two-time-scale
+pairs of Appendix A (assumption (A6): b(n) = o(a(n))).
+
+Sign convention: ``update`` performs gradient *descent* on the supplied
+grads.  GAN ascent (the paper writes w_{n} = w_{n-1} + a g~) is handled by
+the loss layer handing us the gradient of the loss to minimise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    def init(self, params):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def update(self, params, grads, state, lr):  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD(Optimizer):
+    """Plain SGD, optionally with heavy-ball momentum."""
+
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {"count": jnp.zeros((), jnp.int32)}
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "velocity": _tree_map(jnp.zeros_like, params),
+        }
+
+    def update(self, params, grads, state, lr):
+        if self.momentum == 0.0:
+            new_params = _tree_map(lambda p, g: p - lr * g, params, grads)
+            return new_params, {"count": state["count"] + 1}
+        vel = _tree_map(lambda v, g: self.momentum * v + g, state["velocity"], grads)
+        new_params = _tree_map(lambda p, v: p - lr * v, params, vel)
+        return new_params, {"count": state["count"] + 1, "velocity": vel}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam(Optimizer):
+    """Adam; the paper's image/TS experiments use Adam(beta1=0.5, beta2=0.999)."""
+
+    b1: float = 0.5
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def init(self, params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "mu": _tree_map(jnp.zeros_like, params),
+            "nu": _tree_map(jnp.zeros_like, params),
+        }
+
+    def update(self, params, grads, state, lr):
+        count = state["count"] + 1
+        mu = _tree_map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state["mu"], grads)
+        nu = _tree_map(lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g),
+                       state["nu"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** c
+        bc2 = 1.0 - self.b2 ** c
+
+        def step(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * mhat / (jnp.sqrt(vhat) + self.eps)
+
+        new_params = _tree_map(step, params, mu, nu)
+        return new_params, {"count": count, "mu": mu, "nu": nu}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW(Optimizer):
+    """Adam with decoupled weight decay — used by the LM-backbone examples."""
+
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        return Adam(self.b1, self.b2, self.eps).init(params)
+
+    def update(self, params, grads, state, lr):
+        inner = Adam(self.b1, self.b2, self.eps)
+        new_params, new_state = inner.update(params, grads, state, lr)
+        if self.weight_decay:
+            new_params = _tree_map(
+                lambda np_, p: np_ - lr * self.weight_decay * p, new_params, params)
+        return new_params, new_state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return _tree_map(lambda g: g * scale, grads), norm

@@ -1,0 +1,85 @@
+"""Learning-rate schedules.
+
+The paper's convergence theory needs (A2):
+
+    sum_n a(n) = inf,   sum_n a(n)^2 < inf     (likewise for b)
+
+satisfied by power decays a(n) = a0 / (1 + n/tau)^p with p in (1/2, 1].
+Two-time-scale updates (Appendix A) additionally need (A6): b(n) = o(a(n)),
+e.g. a(n) ~ n^{-0.6} (fast discriminator) with b(n) ~ n^{-0.9} (slow
+generator).  ``ttur_pair`` builds such a pair.
+
+Constant schedules are offered for the experiment sections, which (like the
+paper's own experiments) run constant-LR Adam even though the theory is
+stated for decaying SGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+def constant(lr: float) -> Schedule:
+    return lambda n: jnp.asarray(lr, jnp.float32)
+
+
+def power_decay(a0: float, tau: float = 100.0, p: float = 0.75) -> Schedule:
+    """a(n) = a0 / (1 + n/tau)^p.  (A2) holds iff 1/2 < p <= 1."""
+    if not (0.5 < p <= 1.0):
+        raise ValueError(f"power_decay exponent p={p} violates (A2); need 1/2 < p <= 1")
+
+    def sched(n):
+        return jnp.asarray(a0, jnp.float32) / (1.0 + n / tau) ** p
+
+    return sched
+
+
+def inverse_time(a0: float, tau: float = 100.0) -> Schedule:
+    """a(n) = a0 / (1 + n/tau)  — the p=1 corner of (A2)."""
+    return power_decay(a0, tau, 1.0)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0) -> Schedule:
+    """Standard LM-pretraining schedule for the backbone examples."""
+
+    def sched(n):
+        n = jnp.asarray(n, jnp.float32)
+        warm = peak * jnp.minimum(n / max(warmup, 1), 1.0)
+        t = jnp.clip((n - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(n < warmup, warm, cos)
+
+    return sched
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeScales:
+    """The (a(n), b(n)) pair for discriminator / generator updates."""
+
+    a: Schedule  # discriminator lr a(n)
+    b: Schedule  # generator lr b(n)
+    equal: bool  # True -> single time-scale analysis (Theorem 1) applies
+
+
+def equal_timescale(sched: Schedule) -> TimeScales:
+    return TimeScales(a=sched, b=sched, equal=True)
+
+
+def ttur_pair(a0: float, b0: float, tau: float = 100.0,
+              pa: float = 0.6, pb: float = 0.9) -> TimeScales:
+    """Two-time-scale pair with b(n) = o(a(n))  (A6): pb > pa.
+
+    Both components satisfy (A2) individually.
+    """
+    if not pb > pa:
+        raise ValueError("(A6) b(n)=o(a(n)) requires pb > pa")
+    return TimeScales(a=power_decay(a0, tau, pa), b=power_decay(b0, tau, pb), equal=False)
+
+
+def constant_ttur(a0: float, b0: float) -> TimeScales:
+    """Heusel-et-al-style constant TTUR (paper Table 2 uses lr_D = 2 lr_G)."""
+    return TimeScales(a=constant(a0), b=constant(b0), equal=a0 == b0)

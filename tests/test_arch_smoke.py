@@ -1,0 +1,127 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each of the 10 architectures is instantiated as a REDUCED same-family
+variant (<=2-3 layers, d_model<=512, <=4 experts) and runs one forward and
+one federated adversarial train step on CPU, asserting output shapes and
+the absence of NaNs.  The FULL configs are exercised by the dry-run only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core import FedGAN, FedGANConfig
+from repro.launch.steps import make_lm_gan_task
+from repro.models.transformer import Backbone
+from repro.optim import SGD, constant, equal_timescale
+
+ARCHS = list_archs()
+
+
+def test_registry_has_all_ten():
+    assert len(ARCHS) == 10
+    fams = {get_config(a).family for a in ARCHS}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "audio", "vlm"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+    }[arch]
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == spec
+    assert cfg.source  # provenance recorded
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch).smoke()
+    assert cfg.d_model <= 512 and cfg.num_layers <= 3
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    bb = Backbone(cfg)
+    params = bb.init(jax.random.key(0))
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "audio":
+        kw["encoder_frames"] = 0.1 * jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_seq, cfg.d_model))
+    out = bb.apply(params, toks, **kw)
+    assert out["logits"].shape == (B, T, cfg.padded_vocab)
+    assert not jnp.isnan(out["logits"]).any()
+    assert not jnp.isnan(out["hidden"]).any()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_fedgan_train_step(arch):
+    """One FedGAN round (2 local steps + sync) on the reduced variant."""
+    cfg = get_config(arch).smoke()
+    task = make_lm_gan_task(cfg)
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, 2), sync_interval=2),
+                 opt_g=SGD(), opt_d=SGD(),
+                 scales=equal_timescale(constant(1e-3)))
+    state = fed.init_state(jax.random.key(0))
+    K, P, A, b, T = 2, 1, 2, 2, 16
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (K, P, A, b, T),
+                                          0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.key(2), (K, P, A, b, cfg.encoder_seq, cfg.d_model))
+    seeds = jax.random.randint(jax.random.key(3), (K, P, A), 0,
+                               2 ** 31 - 1).astype(jnp.uint32)
+    state2, metrics = jax.jit(fed.round)(state, batch, seeds)
+    assert np.isfinite(float(jnp.mean(metrics["d_loss"])))
+    assert np.isfinite(float(jnp.mean(metrics["g_loss"])))
+    # params moved and are agent-synced after the round
+    th0 = jax.tree_util.tree_leaves(state["params"]["gen"])[0]
+    th1 = jax.tree_util.tree_leaves(state2["params"]["gen"])[0]
+    assert not np.allclose(np.asarray(th0), np.asarray(th1))
+    for leaf in jax.tree_util.tree_leaves(state2["params"]):
+        np.testing.assert_allclose(np.asarray(leaf[0, 0]), np.asarray(leaf[0, 1]),
+                                   rtol=1e-5, atol=1e-6)
+        assert not jnp.isnan(leaf).any()
+
+
+@pytest.mark.parametrize("arch", ["gemma3-4b", "mamba2-2.7b", "zamba2-7b",
+                                  "whisper-medium"])
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).smoke()
+    bb = Backbone(cfg)
+    params = bb.init(jax.random.key(0))
+    B, S = 2, 16
+    cache = bb.init_cache(B, S)
+    if cfg.family == "audio":
+        frames = 0.1 * jax.random.normal(jax.random.key(2),
+                                         (B, cfg.encoder_seq, cfg.d_model))
+        mem = bb.encode(params, frames)
+        blk = bb._block(cross=True)
+        cache["cross"] = jax.vmap(
+            lambda bp: blk.attn.build_memory_cache(bp["xattn"], mem))(params["blocks"])
+    tok = jax.random.randint(jax.random.key(1), (B, 1), 0, cfg.vocab_size)
+    logits, cache2 = bb.decode(params, tok, cache, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert not jnp.isnan(logits).any()
+
+
+def test_long_decode_support_flags():
+    from repro.configs import pair_supported
+    runs = {a: pair_supported(a, "long_500k")[0] for a in ARCHS}
+    assert runs == {
+        "gemma3-4b": True, "mixtral-8x22b": True, "qwen3-8b": False,
+        "phi4-mini-3.8b": False, "whisper-medium": False, "glm4-9b": False,
+        "zamba2-7b": True, "granite-moe-3b-a800m": False,
+        "chameleon-34b": False, "mamba2-2.7b": True,
+    }

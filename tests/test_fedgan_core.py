@@ -1,0 +1,219 @@
+"""Core FedGAN algorithm: unit + hypothesis property tests (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FedGAN, FedGANConfig, GANTask, dataset_weights, losses
+from repro.core.fedgan import uniform_weights
+from repro.optim import SGD, Adam, constant, equal_timescale
+
+tmap = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# A tiny quadratic GAN task for exact reasoning
+# ---------------------------------------------------------------------------
+
+
+def quad_task():
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": {"theta": 0.1 * jax.random.normal(kg, (3,))},
+                "disc": {"w": 0.1 * jax.random.normal(kd, (3,))}}
+
+    def disc_loss(params, batch, rng):
+        # simple saddle: L_D = -w.(x_mean - theta) + |w|^2/2
+        xm = jnp.mean(batch["x"], axis=0)
+        g = jax.lax.stop_gradient(params["gen"]["theta"])
+        return (-jnp.dot(params["disc"]["w"], xm - g)
+                + 0.5 * jnp.sum(params["disc"]["w"] ** 2))
+
+    def gen_loss(params, batch, rng):
+        w = jax.lax.stop_gradient(params["disc"]["w"])
+        return jnp.dot(w, params["gen"]["theta"])
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss)
+
+
+def _round_inputs(rng, K, P, A, n=8, d=3):
+    x = jax.random.normal(rng, (K, P, A, n, d))
+    seeds = jax.random.randint(jax.random.fold_in(rng, 7), (K, P, A), 0,
+                               2 ** 31 - 1).astype(jnp.uint32)
+    return {"x": x}, seeds
+
+
+def _fed(task, K=4, grid=(1, 4), mode="fedgan", **kw):
+    return FedGAN(task, FedGANConfig(agent_grid=grid, sync_interval=K,
+                                     mode=mode, **kw),
+                  opt_g=SGD(), opt_d=SGD(),
+                  scales=equal_timescale(constant(0.05)))
+
+
+def test_init_state_identical_across_agents():
+    fed = _fed(quad_task())
+    state = fed.init_state(jax.random.key(0))
+    th = state["params"]["gen"]["theta"]
+    assert th.shape[:2] == (1, 4)
+    for a in range(4):
+        np.testing.assert_array_equal(np.asarray(th[0, a]), np.asarray(th[0, 0]))
+
+
+def test_sync_makes_agents_equal_and_weighted():
+    fed = _fed(quad_task(), K=2)
+    state = fed.init_state(jax.random.key(0))
+    # de-synchronise params manually
+    state["params"]["gen"]["theta"] = jnp.arange(12.0).reshape(1, 4, 3)
+    synced = fed._sync(state)
+    th = synced["params"]["gen"]["theta"]
+    want = jnp.mean(jnp.arange(12.0).reshape(4, 3), axis=0)
+    for a in range(4):
+        np.testing.assert_allclose(np.asarray(th[0, a]), np.asarray(want), rtol=1e-6)
+
+
+def test_round_fedgan_ends_synced_local_only_does_not():
+    rng = jax.random.key(1)
+    batches, seeds = _round_inputs(rng, 4, 1, 4)
+    # make agent data non-iid so local runs diverge
+    batches = {"x": batches["x"] + jnp.arange(4.0)[None, None, :, None, None]}
+    for mode, expect_equal in [("fedgan", True), ("local_only", False),
+                               ("distributed", True)]:
+        fed = _fed(quad_task(), K=4, mode=mode)
+        state = fed.init_state(jax.random.key(0))
+        state, _ = jax.jit(fed.round)(state, batches, seeds)
+        th = state["params"]["gen"]["theta"][0]
+        equal = bool(jnp.allclose(th[0], th[1], atol=1e-6) and
+                     jnp.allclose(th[0], th[3], atol=1e-6))
+        assert equal == expect_equal, mode
+
+
+def test_distributed_equals_fedgan_k1_for_sgd():
+    """With K=1 and plain SGD, parameter averaging after the step equals
+    averaging the gradients (linearity) -> the two modes coincide."""
+    rng = jax.random.key(2)
+    batches, seeds = _round_inputs(rng, 1, 1, 4)
+    batches = {"x": batches["x"] + jnp.arange(4.0)[None, None, :, None, None]}
+    out = {}
+    for mode in ("fedgan", "distributed"):
+        fed = _fed(quad_task(), K=1, mode=mode)
+        state = fed.init_state(jax.random.key(0))
+        state, _ = jax.jit(fed.round)(state, batches, seeds)
+        out[mode] = fed.averaged_params(state)
+    for a, b in zip(jax.tree_util.tree_leaves(out["fedgan"]),
+                    jax.tree_util.tree_leaves(out["distributed"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_hierarchical_matches_fedgan_when_single_pod():
+    """With P=1, intra-pod sync == full sync, so hierarchical(K1) just syncs
+    more often; with K1=K it must equal plain fedgan exactly."""
+    rng = jax.random.key(3)
+    batches, seeds = _round_inputs(rng, 4, 1, 4)
+    fed_h = _fed(quad_task(), K=4, mode="hierarchical", intra_interval=4)
+    fed_f = _fed(quad_task(), K=4, mode="fedgan")
+    s_h, _ = jax.jit(fed_h.round)(fed_h.init_state(jax.random.key(0)), batches, seeds)
+    s_f, _ = jax.jit(fed_f.round)(fed_f.init_state(jax.random.key(0)), batches, seeds)
+    for a, b in zip(jax.tree_util.tree_leaves(s_h["params"]),
+                    jax.tree_util.tree_leaves(s_f["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_validate_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        FedGANConfig(mode="hierarchical", sync_interval=4, intra_interval=3).validate()
+    with pytest.raises(ValueError):
+        FedGANConfig(mode="nonsense").validate()
+
+
+def test_comm_accounting_matches_paper_ratio():
+    fed = _fed(quad_task(), K=20)
+    state = fed.init_state(jax.random.key(0))
+    acc = fed.comm_bytes_per_round(state)
+    assert acc["per_agent_per_round"]["distributed"] == \
+        20 * acc["per_agent_per_round"]["fedgan"]
+    assert acc["ratio"] == 20
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(1, 1000), min_size=2, max_size=8))
+def test_dataset_weights_normalised(sizes):
+    w = dataset_weights(sizes)
+    assert abs(float(jnp.sum(w)) - 1.0) < 1e-5
+    assert float(jnp.min(w)) >= 0.0
+    # proportionality (paper §3.1)
+    ratio = np.asarray(w) * sum(sizes) / np.asarray(sizes, np.float32)
+    np.testing.assert_allclose(ratio, 1.0, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    vals=st.lists(st.floats(-100, 100, allow_nan=False), min_size=4, max_size=4),
+    w_raw=st.lists(st.floats(0.01, 10, allow_nan=False), min_size=4, max_size=4),
+)
+def test_weighted_average_is_convex_combination(vals, w_raw):
+    """The sync average must stay inside the convex hull of agent params."""
+    task = quad_task()
+    w = jnp.asarray(w_raw) / sum(w_raw)
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, 4), sync_interval=1),
+                 weights=w.reshape(1, 4),
+                 scales=equal_timescale(constant(0.1)))
+    state = fed.init_state(jax.random.key(0))
+    v = jnp.asarray(vals, jnp.float32)
+    state["params"]["gen"]["theta"] = v.reshape(1, 4, 1) * jnp.ones((1, 4, 3))
+    synced = fed._sync(state)
+    th = np.asarray(synced["params"]["gen"]["theta"])
+    assert th.min() >= min(vals) - 1e-3
+    assert th.max() <= max(vals) + 1e-3
+    np.testing.assert_allclose(th[0, 0, 0], float(jnp.dot(w, v)), rtol=1e-4,
+                               atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(perm=st.permutations(range(4)))
+def test_sync_permutation_equivariance(perm):
+    """Uniform-weight averaging is invariant to agent permutation."""
+    task = quad_task()
+    fed = _fed(task, K=1)
+    state = fed.init_state(jax.random.key(0))
+    base = jnp.arange(12.0).reshape(1, 4, 3)
+    state["params"]["gen"]["theta"] = base
+    a = fed._sync(state)["params"]["gen"]["theta"][0, 0]
+    state["params"]["gen"]["theta"] = base[:, list(perm)]
+    b = fed._sync(state)["params"]["gen"]["theta"][0, 0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_sync_fixed_point(seed):
+    """If all agents already share identical params, sync is a no-op."""
+    fed = _fed(quad_task(), K=1)
+    state = fed.init_state(jax.random.key(seed))
+    synced = fed._sync(state)
+    for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                    jax.tree_util.tree_leaves(synced["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_sync_dtype_compression_close_to_exact():
+    fed_c = _fed(quad_task(), K=1, sync_dtype=jnp.bfloat16)
+    fed_e = _fed(quad_task(), K=1)
+    state = fed_e.init_state(jax.random.key(0))
+    state["params"]["gen"]["theta"] = jax.random.normal(jax.random.key(1), (1, 4, 3))
+    exact = fed_e._sync(state)["params"]["gen"]["theta"]
+    comp = fed_c._sync(state)["params"]["gen"]["theta"]
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(exact), atol=0.05)
+
+
+def test_uniform_weights_shape():
+    cfg = FedGANConfig(agent_grid=(2, 3))
+    w = uniform_weights(cfg)
+    assert w.shape == (2, 3)
+    assert abs(float(jnp.sum(w)) - 1.0) < 1e-6

@@ -1,0 +1,157 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles, with
+shape/dtype sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedavg.ops import fedavg_tree
+from repro.kernels.fedavg.ref import fedavg_flat_ref, fedavg_tree_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_decode_ref, ssd_ref
+
+
+# ---------------------------------------------------------------------------
+# fedavg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,N", [(2, 64), (5, 1037), (8, 4096), (16, 513)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_flat_matches_ref(B, N, dtype):
+    w = jax.random.dirichlet(jax.random.key(0), jnp.ones(B))
+    x = jax.random.normal(jax.random.key(1), (B, N)).astype(dtype)
+    got = fedavg_tree(w, {"x": x}, interpret=True)["x"]
+    want = fedavg_flat_ref(w, x)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_fedavg_tree_multi_leaf_and_2d_agent_grid():
+    w = jnp.full((2, 3), 1.0 / 6)
+    tree = {"a": jax.random.normal(jax.random.key(0), (2, 3, 7, 5)),
+            "b": [jax.random.normal(jax.random.key(1), (2, 3, 11))]}
+    got = fedavg_tree(w, tree, interpret=True)
+    want = fedavg_tree_ref(w.reshape(-1), jax.tree_util.tree_map(
+        lambda x: x.reshape((6,) + x.shape[2:]), tree))
+    for g, r in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), atol=1e-5)
+
+
+def test_fedavg_block_sizes():
+    w = jnp.ones(4) / 4
+    x = jax.random.normal(jax.random.key(2), (4, 777))
+    for block in (64, 128, 512, 1024):
+        got = fedavg_tree(w, {"x": x}, block=block, interpret=True)["x"]
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(fedavg_flat_ref(w, x)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (T, S, nh, nkv, hd, causal, window)
+    (128, 128, 4, 4, 64, True, 0),
+    (256, 256, 4, 2, 64, True, 0),
+    (256, 256, 8, 1, 32, True, 0),     # MQA
+    (128, 128, 4, 2, 64, False, 0),    # bidirectional (encoder)
+    (256, 256, 4, 2, 64, True, 64),    # sliding window
+    (192, 192, 4, 4, 32, True, 50),    # non-multiple window + padded T
+    (96, 96, 2, 2, 128, True, 0),      # T < block
+]
+
+
+@pytest.mark.parametrize("T,S,nh,nkv,hd,causal,window", FLASH_CASES)
+def test_flash_attention_matches_ref(T, S, nh, nkv, hd, causal, window):
+    q = jax.random.normal(jax.random.key(0), (2, T, nh, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (2, S, nkv, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (2, S, nkv, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    want = jnp.swapaxes(attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=causal, window=window), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.key(0), (1, 128, 4, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, 128, 2, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, 128, 2, 64)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = jnp.swapaxes(attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True), 1, 2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_flash_attention_block_shapes():
+    q = jax.random.normal(jax.random.key(0), (1, 256, 2, 64))
+    k = jax.random.normal(jax.random.key(1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.key(2), (1, 256, 2, 64))
+    want = flash_attention(q, k, v, causal=True, interpret=True)
+    for bq, bk in [(64, 64), (64, 128), (128, 64)]:
+        got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (T, nh, hd, ds, chunk, head_block)
+    (64, 4, 16, 8, 16, 4),
+    (128, 8, 32, 16, 32, 4),
+    (128, 8, 32, 16, 32, 8),
+    (96, 2, 64, 32, 32, 1),
+    (256, 4, 16, 64, 128, 2),
+]
+
+
+def _ssd_inputs(T, nh, hd, ds, dtype=jnp.float32):
+    x = 0.5 * jax.random.normal(jax.random.key(0), (2, T, nh, hd)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(1), (2, T, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(2), (nh,)))
+    B = 0.5 * jax.random.normal(jax.random.key(3), (2, T, ds))
+    C = 0.5 * jax.random.normal(jax.random.key(4), (2, T, ds))
+    return x, dt, A, B, C
+
+
+@pytest.mark.parametrize("T,nh,hd,ds,chunk,head_block", SSD_CASES)
+def test_ssd_kernel_matches_ref(T, nh, hd, ds, chunk, head_block):
+    x, dt, A, B, C = _ssd_inputs(T, nh, hd, ds)
+    got = ssd(x, dt, A, B, C, chunk=chunk, head_block=head_block, interpret=True)
+    want = ssd_ref(x, dt, A, B, C, chunk=chunk)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(want) / scale,
+                               atol=3e-6)
+
+
+def test_ssd_chunk_invariance():
+    """The chunked algorithm must be exact: answers identical across chunk
+    sizes (up to float assoc)."""
+    x, dt, A, B, C = _ssd_inputs(128, 4, 16, 8)
+    outs = [ssd_ref(x, dt, A, B, C, chunk=c) for c in (8, 16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]), atol=1e-4)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == literal per-step recurrence."""
+    T, nh, hd, ds = 32, 2, 8, 4
+    x, dt, A, B, C = _ssd_inputs(T, nh, hd, ds)
+    want = ssd_ref(x, dt, A, B, C, chunk=8)
+    state = jnp.zeros((2, nh, hd, ds))
+    ys = []
+    for t in range(T):
+        y, state = ssd_decode_ref(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y)
+    seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(want), atol=1e-5)

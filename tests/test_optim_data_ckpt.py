@@ -1,0 +1,220 @@
+"""Optimizers/schedules, data pipeline and checkpoint substrate tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import list_checkpoints, restore_checkpoint, save_checkpoint
+from repro.data import (FederatedRounds, dirichlet_partition,
+                        label_shard_partition, partition_sizes, synthetic)
+from repro.optim import (SGD, Adam, AdamW, clip_by_global_norm, constant,
+                         equal_timescale, global_norm, inverse_time,
+                         power_decay, ttur_pair)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_step():
+    opt = SGD()
+    params = {"w": jnp.ones(3)}
+    state = opt.init(params)
+    new, state = opt.update(params, {"w": jnp.full(3, 2.0)}, state, 0.1)
+    np.testing.assert_allclose(np.asarray(new["w"]), 0.8, rtol=1e-6)
+
+
+def test_adam_matches_reference_impl():
+    """Cross-check against a hand-rolled numpy Adam."""
+    b1, b2, eps, lr = 0.5, 0.999, 1e-8, 1e-2
+    opt = Adam(b1=b1, b2=b2, eps=eps)
+    p = np.asarray([1.0, -2.0, 3.0], np.float32)
+    params = {"w": jnp.asarray(p)}
+    state = opt.init(params)
+    m = np.zeros(3)
+    v = np.zeros(3)
+    rng = np.random.RandomState(0)
+    for t in range(1, 6):
+        g = rng.randn(3).astype(np.float32)
+        params, state = opt.update(params, {"w": jnp.asarray(g)}, state, lr)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g ** 2
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        p = p - lr * mh / (np.sqrt(vh) + eps)
+        np.testing.assert_allclose(np.asarray(params["w"]), p, rtol=1e-5)
+
+
+def test_adamw_decay():
+    opt = AdamW(weight_decay=0.1)
+    params = {"w": jnp.ones(2)}
+    state = opt.init(params)
+    new, _ = opt.update(params, {"w": jnp.zeros(2)}, state, 0.5)
+    np.testing.assert_allclose(np.asarray(new["w"]), 1.0 - 0.5 * 0.1, rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 3.0), "b": jnp.full(9, 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# schedules: (A2) and (A6)
+# ---------------------------------------------------------------------------
+
+
+def test_power_decay_satisfies_a2_numerically():
+    sched = power_decay(0.1, tau=10, p=0.75)
+    n = jnp.arange(100000, dtype=jnp.float32)
+    a = jax.vmap(sched)(n)
+    # sum a diverges (grows with horizon), sum a^2 converges
+    s1a = float(jnp.sum(a[:50000]))
+    s1b = float(jnp.sum(a))
+    assert s1b > s1a * 1.15  # still growing
+    s2_tail = float(jnp.sum(a[50000:] ** 2))
+    assert s2_tail < 0.01 * float(jnp.sum(a[:100] ** 2)) + 1e-3
+
+
+def test_power_decay_rejects_a2_violations():
+    with pytest.raises(ValueError):
+        power_decay(0.1, p=0.5)   # sum a^2 = inf
+    with pytest.raises(ValueError):
+        power_decay(0.1, p=1.5)   # sum a < inf
+
+
+def test_ttur_pair_satisfies_a6():
+    ts = ttur_pair(0.1, 0.1, pa=0.6, pb=0.9)
+    assert not ts.equal
+    # b(n)/a(n) -> 0: the ratio must decay monotonically toward zero
+    r4 = float(ts.b(jnp.float32(1e4)) / ts.a(jnp.float32(1e4)))
+    r8 = float(ts.b(jnp.float32(1e8)) / ts.a(jnp.float32(1e8)))
+    assert r8 < r4 < 0.5
+    assert r8 < 0.02
+
+
+def test_ttur_pair_rejects_a6_violation():
+    with pytest.raises(ValueError):
+        ttur_pair(0.1, 0.1, pa=0.9, pb=0.6)
+
+
+def test_inverse_time_and_constant():
+    assert float(inverse_time(0.2, tau=1.0)(jnp.float32(1.0))) == pytest.approx(0.1)
+    assert float(constant(0.3)(jnp.float32(999))) == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(num_agents=st.integers(2, 8), seed=st.integers(0, 100))
+def test_label_shard_partition_covers_everything(num_agents, seed):
+    labels = np.repeat(np.arange(10), 17)
+    parts = label_shard_partition(labels, num_agents, seed=seed)
+    all_idx = np.concatenate([np.asarray(p) for p in parts])
+    assert sorted(all_idx.tolist()) == list(range(len(labels)))
+
+
+def test_label_shard_partition_is_non_iid():
+    labels = np.repeat(np.arange(10), 20)
+    parts = label_shard_partition(labels, 5, seed=0)
+    for p in parts:
+        classes = np.unique(labels[np.asarray(p)])
+        assert len(classes) <= 2  # paper: 2 classes per agent
+
+
+def test_dirichlet_partition_covers_everything():
+    labels = np.repeat(np.arange(10), 20)
+    parts = dirichlet_partition(labels, 5, alpha=0.3, seed=1)
+    all_idx = np.concatenate([np.asarray(p) for p in parts])
+    assert sorted(all_idx.tolist()) == list(range(len(labels)))
+    sizes = partition_sizes(parts)
+    assert float(jnp.sum(sizes)) == len(labels)
+
+
+def test_federated_rounds_shapes_and_determinism():
+    agent_data = [{"x": jnp.arange(40.0) + 100 * i} for i in range(4)]
+    fr = FederatedRounds(agent_data, (2, 2), batch_size=8, sync_interval=3,
+                         sample_extra=lambda r, s: {"z": jax.random.normal(r, s + (2,))})
+    b1, s1 = fr.round_batches(jax.random.key(5))
+    b2, s2 = fr.round_batches(jax.random.key(5))
+    assert b1["x"].shape == (3, 2, 2, 8)
+    assert b1["z"].shape == (3, 2, 2, 8, 2)
+    assert s1.shape == (3, 2, 2)
+    np.testing.assert_array_equal(np.asarray(b1["x"]), np.asarray(b2["x"]))
+    # agent separation: agent (p, a) samples only from its own dataset
+    for p in range(2):
+        for a in range(2):
+            i = p * 2 + a
+            vals = np.asarray(b1["x"][:, p, a])
+            assert ((vals >= 100 * i) & (vals < 100 * i + 40)).all()
+
+
+def test_federated_rounds_rejects_bad_grid():
+    with pytest.raises(ValueError):
+        FederatedRounds([{"x": jnp.zeros(4)}] * 3, (2, 2), 2, 2)
+
+
+def test_synthetic_generators_shapes():
+    r = jax.random.key(0)
+    assert synthetic.sample_2d_segment(r, 50, 2, 5).shape == (50,)
+    assert synthetic.sample_mixed_gaussian(r, 50).shape == (50, 2)
+    assert synthetic.sample_swiss_roll(r, 50).shape == (50, 2)
+    img = synthetic.sample_class_images(r, 4, jnp.arange(4), hw=16)
+    assert img.shape == (4, 16, 16, 3)
+    assert float(jnp.max(jnp.abs(img))) <= 1.0
+    hl = synthetic.sample_household_load(r, 6, climate_zone=jnp.arange(6) % 5)
+    assert hl.shape == (6, 24) and float(jnp.max(hl)) <= 1.0 + 1e-6
+    ev = synthetic.sample_ev_sessions(r, 6, category=jnp.arange(6) % 5)
+    assert ev.shape == (6, 24)
+    tok = synthetic.sample_agent_tokens(r, 3, 8, 64, agent=0, num_agents=4)
+    assert tok.shape == (3, 8) and int(tok.max()) < 64
+
+
+def test_agent_tokens_are_non_iid():
+    r = jax.random.key(0)
+    a0 = synthetic.sample_agent_tokens(r, 64, 32, 1000, agent=0, num_agents=4)
+    a3 = synthetic.sample_agent_tokens(r, 64, 32, 1000, agent=3, num_agents=4)
+    # distributions differ: agent-specific vocabulary slices dominate
+    assert abs(float(jnp.mean(a0)) - float(jnp.mean(a3))) > 50
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_structure_and_dtypes():
+    state = {
+        "params": {"w": jnp.ones((3, 4), jnp.bfloat16),
+                   "layers": [jnp.zeros(2), jnp.arange(3.0)]},
+        "opt": ({"mu": jnp.full((2, 2), 0.5)},),
+        "step": jnp.int32(42),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, state, step=42, metadata={"K": 20, "mode": "fedgan"})
+        got, man = restore_checkpoint(d)
+        assert man["metadata"]["K"] == 20
+        assert isinstance(got["params"]["layers"], list)
+        assert isinstance(got["opt"], tuple)
+        assert got["params"]["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(got["step"]), 42)
+
+
+def test_checkpoint_multiple_steps_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (10, 20, 30):
+            save_checkpoint(d, {"x": jnp.full(2, float(s))}, step=s)
+        assert list_checkpoints(d) == [10, 20, 30]
+        got, man = restore_checkpoint(d)
+        assert man["step"] == 30
+        got15, _ = restore_checkpoint(d, step=20)
+        np.testing.assert_allclose(np.asarray(got15["x"]), 20.0)

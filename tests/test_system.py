@@ -1,0 +1,168 @@
+"""End-to-end behaviour tests for the FedGAN system (paper-level claims).
+
+These are the system-level invariants the paper asserts:
+  * the 2D toy converges to (theta, psi) = (1, 0) and is robust to K (Fig 5)
+  * FedGAN with non-iid agents recovers the POOLED distribution, not any
+    single agent's (the whole point of the algorithm)
+  * drift stays below the Lemma 1/2 bounds
+  * two-time-scale (A6) updates also converge
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FedGAN, FedGANConfig, GANTask, estimate_constants,
+                        losses, measure_drift, r1_bound, r2_bound)
+from repro.data import synthetic
+from repro.models.gan_nets import (MLPDiscriminator, MLPGenerator,
+                                   Toy2DDiscriminator, Toy2DGenerator)
+from repro.optim import SGD, constant, constant_ttur, equal_timescale, power_decay
+
+
+def _toy2d_task(theta0=0.5, psi0=0.5):
+    G, D = Toy2DGenerator(theta0=theta0), Toy2DDiscriminator(psi0=psi0)
+
+    def init(rng):
+        return {"gen": G.init(rng), "disc": D.init(rng)}
+
+    def disc_loss(params, batch, rng):
+        fake = jax.lax.stop_gradient(G.apply(params["gen"], batch["z"]))
+        return losses.ns_d_loss(D.apply(params["disc"], batch["x"]),
+                                D.apply(params["disc"], fake))
+
+    def gen_loss(params, batch, rng):
+        fake = G.apply(params["gen"], batch["z"])
+        return losses.ns_g_loss(D.apply(params["disc"], fake))
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+
+
+def _run_toy2d(K, steps=3000, B=5, mode="fedgan", scales=None, seed=0):
+    task, _ = _toy2d_task()
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
+                                    mode=mode),
+                 opt_g=SGD(), opt_d=SGD(),
+                 scales=scales or equal_timescale(power_decay(0.1, tau=200, p=0.6)))
+    state = fed.init_state(jax.random.key(seed))
+    rng = jax.random.key(seed + 1)
+    round_fn = jax.jit(fed.round)
+    n = 64
+    for r in range(steps // K):
+        rng, r1, r2, r3 = jax.random.split(rng, 4)
+        x = jnp.stack([synthetic.sample_2d_segment(
+            jax.random.fold_in(r1, i), K * n, i, B).reshape(K, n)
+            for i in range(B)], axis=1).reshape(K, 1, B, n)
+        z = jax.random.uniform(r2, (K, 1, B, n), minval=-1, maxval=1)
+        seeds = jax.random.randint(r3, (K, 1, B), 0, 2 ** 31 - 1).astype(jnp.uint32)
+        state, _ = round_fn(state, {"x": x, "z": z}, seeds)
+    return fed, state
+
+
+@pytest.mark.parametrize("K", [1, 5, 20])
+def test_2d_system_converges_to_one_zero(K):
+    """Paper Fig 5: (theta, psi) -> (1, 0) for K in {1, 5, 20, 50}."""
+    fed, state = _run_toy2d(K)
+    avg = fed.averaged_params(state)
+    assert abs(float(avg["gen"]["theta"]) - 1.0) < 0.08
+    assert abs(float(avg["disc"]["psi"])) < 0.05
+
+
+def test_2d_system_ttur_converges():
+    """Appendix A: two-time-scale updates (A6) also track the ODE."""
+    scales = constant_ttur(0.08, 0.04)
+    fed, state = _run_toy2d(K=5, scales=scales, steps=4000)
+    avg = fed.averaged_params(state)
+    assert abs(float(avg["gen"]["theta"]) - 1.0) < 0.1
+
+
+def test_fedgan_covers_pooled_modes_not_local():
+    """B=4 agents each hold 2 of 8 Gaussian modes; the synced generator must
+    cover (substantially) more modes than any single agent's data."""
+    from repro.evals import mode_stats
+    G = MLPGenerator(latent_dim=2, out_dim=2, hidden=64, depth=2)
+    D = MLPDiscriminator(in_dim=2, hidden=64, depth=2)
+
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": G.init(kg), "disc": D.init(kd)}
+
+    def disc_loss(params, batch, rng):
+        fake = jax.lax.stop_gradient(G.apply(params["gen"], batch["z"]))
+        return losses.ns_d_loss(D.apply(params["disc"], batch["x"]),
+                                D.apply(params["disc"], fake))
+
+    def gen_loss(params, batch, rng):
+        return losses.ns_g_loss(
+            D.apply(params["disc"], G.apply(params["gen"], batch["z"])))
+
+    task = GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss)
+    B, K = 4, 5
+    from repro.optim import Adam
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K),
+                 opt_g=Adam(), opt_d=Adam(),
+                 scales=equal_timescale(constant(2e-4)))
+    state = fed.init_state(jax.random.key(0))
+    round_fn = jax.jit(fed.round)
+    rng = jax.random.key(1)
+    n = 128
+    for r in range(2500 // K):
+        rng, r1, r2, r3 = jax.random.split(rng, 4)
+        x = jnp.stack([synthetic.sample_mixed_gaussian(
+            jax.random.fold_in(r1, r * B + i), K * n,
+            mode_subset=[2 * i, 2 * i + 1]).reshape(K, n, 2)
+            for i in range(B)], axis=1).reshape(K, 1, B, n, 2)
+        z = jax.random.normal(r2, (K, 1, B, n, 2))
+        seeds = jax.random.randint(r3, (K, 1, B), 0, 2 ** 31 - 1).astype(jnp.uint32)
+        state, _ = round_fn(state, {"x": x, "z": z}, seeds)
+
+    gp = fed.averaged_params(state)["gen"]
+    samples = G.apply(gp, jax.random.normal(jax.random.key(9), (2000, 2)))
+    covered, hq, _ = mode_stats(samples, synthetic.mixed_gaussian_modes(),
+                                radius=0.5)
+    assert covered >= 4, f"only {covered} modes covered"
+    assert not np.isnan(np.asarray(samples)).any()
+
+
+def test_drift_stays_below_lemma_bounds():
+    """Lemma 1/2: measured drift of agents vs the virtual centralized
+    sequence must stay below r1(n)/r2(n) computed from estimated constants."""
+    task, _ = _toy2d_task()
+    B, K = 5, 10
+    lr = 0.02
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K),
+                 opt_g=SGD(), opt_d=SGD(),
+                 scales=equal_timescale(constant(lr)))
+    state = fed.init_state(jax.random.key(0))
+    rng = jax.random.key(1)
+    agent_data = [{"x": synthetic.sample_2d_segment(jax.random.fold_in(rng, i),
+                                                    2048, i, B),
+                   "z": jax.random.uniform(jax.random.fold_in(rng, 50 + i),
+                                           (2048,), minval=-1, maxval=1)}
+                  for i in range(B)]
+    params = fed.averaged_params(state)
+    consts = estimate_constants(task, params, agent_data, jax.random.key(2),
+                                minibatch=64, n_var_samples=4, n_lip_samples=4)
+    res = measure_drift(fed, state, agent_data, jax.random.key(3),
+                        n_steps=2 * K, minibatch=64)
+    for n in range(1, 2 * K):
+        bound = float(r1_bound(n, a=lr, K=K, L=consts.L,
+                               sg=consts.sigma_g, sh=consts.sigma_h,
+                               mg=consts.mu_g))
+        measured = float(res["agent_drift"][n - 1])
+        if n % K == 0:
+            continue  # at sync points drift resets to ~0
+        assert measured <= bound * 1.5 + 1e-4, (n, measured, bound)
+    r2 = float(r2_bound(K, a=lr, K=K, L=consts.L, sg=consts.sigma_g,
+                        sh=consts.sigma_h, mg=consts.mu_g))
+    assert float(jnp.max(res["avg_drift"][:K])) <= max(r2, 0.0) * 2.0 + 1e-3
+
+
+def test_reduced_communication_robustness():
+    """Fig 5's qualitative claim: increasing K barely moves the fixed point."""
+    results = {}
+    for K in (1, 20):
+        fed, state = _run_toy2d(K, steps=3000)
+        avg = fed.averaged_params(state)
+        results[K] = float(avg["gen"]["theta"])
+    assert abs(results[1] - results[20]) < 0.1
