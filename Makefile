@@ -1,0 +1,32 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast lint bench bench-dryrun quickstart
+
+# Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
+# subprocesses with --xla_force_host_platform_device_count=8.
+test:
+	$(PY) -m pytest -x -q
+
+# Everything except the slow subprocess lower+compile checks.
+test-fast:
+	$(PY) -m pytest -x -q --ignore=tests/test_sharding_launch.py
+
+# No linter wheel ships in the container: byte-compile everything and verify
+# the public entry points import (catches syntax + import drift cheaply).
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels"
+
+# Paper-figure benchmarks at reduced budgets (CSV to stdout).
+bench:
+	$(PY) benchmarks/run.py --fast
+
+# One production-mesh dry-run pair (slow: compiles for 512 emulated devices).
+ARCH ?= gemma3-4b
+SHAPE ?= train_4k
+bench-dryrun:
+	$(PY) -m repro.launch.dryrun --arch $(ARCH) --shape $(SHAPE)
+
+quickstart:
+	$(PY) examples/quickstart.py --K 20

@@ -29,6 +29,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.dist import collectives
 from repro.optim import Adam, Optimizer, TimeScales, equal_timescale, constant
 
 Params = Any
@@ -119,27 +120,12 @@ class FedGAN:
     def _avg_full(self, tree):
         """Weighted average over (P, A) then broadcast back — eq. (2)+(3).
         Lowers to ONE all-reduce over ("pod","data") on the mesh."""
-        P, A = self.cfg.agent_grid
-        w = self._w()
-        sd = self.cfg.sync_dtype
-
-        def avg(x):
-            xs = x.astype(sd) if sd is not None else x
-            m = jnp.einsum("pa,pa...->...", w.astype(xs.dtype), xs)
-            return jnp.broadcast_to(m.astype(x.dtype), x.shape)
-
-        return tmap(avg, tree)
+        return collectives.average_agents(tree, self._w(),
+                                          sync_dtype=self.cfg.sync_dtype)
 
     def _avg_intra_pod(self, tree):
         """Average within each pod only (hierarchical tier 1)."""
-        w = self._w()
-        w_intra = w / jnp.sum(w, axis=1, keepdims=True)
-
-        def avg(x):
-            m = jnp.einsum("pa,pa...->p...", w_intra.astype(x.dtype), x)
-            return jnp.broadcast_to(m[:, None], x.shape)
-
-        return tmap(avg, tree)
+        return collectives.average_intra_pod(tree, self._w())
 
     def _sync(self, state):
         new = dict(state)
@@ -246,8 +232,7 @@ class FedGAN:
         """Analytic §3.2 accounting: FedGAN moves 2·2M per agent per ROUND
         (send + receive of G and D), i.e. 2·2M/K per step; the distributed
         baseline moves 2·2M per STEP."""
-        leaves = jax.tree_util.tree_leaves(self.agent_params(state))
-        M_bytes = sum(l.size * l.dtype.itemsize for l in leaves)
+        M_bytes = collectives.tree_bytes(self.agent_params(state))
         K = self.cfg.sync_interval
         per_round = {"fedgan": 2 * M_bytes, "distributed": 2 * M_bytes * K}
         return {"param_bytes_M": M_bytes, "per_agent_per_round": per_round,

@@ -1,0 +1,142 @@
+"""JAX version compatibility for the distribution substrate.
+
+The repo programs against the modern mesh-context API — ``jax.set_mesh``,
+``jax.sharding.AxisType``, dict-valued ``Compiled.cost_analysis()`` — while
+the pinned runtime may be an older 0.4-series jax where those are absent
+(``jax.set_mesh`` arrived in 0.6, ``AxisType`` in 0.5.x, and
+``cost_analysis()`` returned a one-element *list* of dicts until 0.4.38).
+
+``install()`` (run once on ``import repro``) adds hasattr-guarded
+equivalents so every call site — including the ``python -c`` subprocess
+snippets in the tier-1 tests — runs unmodified on either side:
+
+  * ``jax.set_mesh(mesh)``      -> context manager entering ``with mesh:``
+                                   (the legacy thread-resources mesh context,
+                                   which with_sharding_constraint + the
+                                   partitioner already consult)
+  * ``Compiled.cost_analysis``  -> normalised to a flat dict
+  * ``make_mesh(shape, axes)``  -> drops ``axis_types`` when unsupported
+
+Nothing is patched when the running jax already provides the API.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def current_mesh():
+    """The concrete mesh made current by ``jax.set_mesh(mesh)`` /
+    ``with mesh:``, or None when no mesh context is active (single-device
+    CPU paper runs — sharding constraints become no-ops there)."""
+    # modern jax: a concrete mesh set via jax.set_mesh
+    try:
+        from jax._src.mesh import get_concrete_mesh  # jax >= 0.6
+
+        m = get_concrete_mesh()
+        if m is not None and getattr(m, "axis_names", None):
+            return m
+    except (ImportError, TypeError):
+        pass
+    # legacy thread-resources context (entered by `with mesh:`)
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types when the running jax has them."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def _version_tuple() -> tuple:
+    try:
+        return tuple(int(x) for x in jax.__version__.split(".")[:3])
+    except ValueError:
+        return (0, 0, 0)
+
+
+def install():
+    """Idempotently install the shims on the running jax."""
+    if not hasattr(jax.sharding, "AxisType"):
+        import enum
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    import inspect
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        def make_mesh_compat(axis_shapes, axis_names, *, axis_types=None,
+                             devices=None):
+            # pre-AxisType jax is all-Auto implicitly; drop the kwarg
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh_compat
+
+    if not hasattr(jax, "set_mesh"):
+
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    # pallas-tpu renamed TPUCompilerParams -> CompilerParams; alias the
+    # modern spelling the kernel modules use.
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        if (not hasattr(pltpu, "CompilerParams")
+                and hasattr(pltpu, "TPUCompilerParams")):
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+    except ImportError:  # pragma: no cover - pallas-free jax builds
+        pass
+
+    # Compiled.cost_analysis returned [dict] (one entry per partition, always
+    # length 1 under SPMD) before 0.4.38; normalise to the modern flat dict.
+    # The returned mapping still answers the old `ca[0]` idiom with itself so
+    # third-party callers in the same process keep working either way.
+    try:
+        from jax._src import stages
+
+        class _CostAnalysis(dict):
+            def __getitem__(self, key):
+                if key == 0 and 0 not in self:
+                    return self
+                return super().__getitem__(key)
+
+        if not getattr(stages.Compiled.cost_analysis, "_repro_compat", False):
+            _orig = stages.Compiled.cost_analysis
+
+            def cost_analysis(self):
+                ca = _orig(self)
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0] if ca else {}
+                return _CostAnalysis(ca)
+
+            cost_analysis._repro_compat = True
+            if _version_tuple() < (0, 4, 38):
+                stages.Compiled.cost_analysis = cost_analysis
+    except Exception:  # pragma: no cover - exotic jax builds
+        pass

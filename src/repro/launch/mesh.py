@@ -12,6 +12,9 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist.compat import make_mesh as _make_mesh
+from repro.dist.sharding import mesh_dims  # noqa: F401  (canonical copy)
+
 # v5e roofline constants (per chip)
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # bytes/s
@@ -23,16 +26,10 @@ HBM_BYTES = 16 * 1024 ** 3
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (requires the XLA host-device
     flag to have been set before jax initialised)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def mesh_dims(mesh) -> dict:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return _make_mesh(shape, axes)

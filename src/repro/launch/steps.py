@@ -26,8 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fedgan import FedGAN, FedGANConfig, GANTask
-from repro.dist.sharding import (batch_axes, named_shardings, param_specs,
-                                 shape_of, _filter_spec)
+from repro.dist.sharding import (batch_axes, filter_spec, named_shardings,
+                                 param_specs, shape_of)
 from repro.launch.mesh import mesh_dims
 from repro.models.adversarial import AdversarialLM
 from repro.models.config import ArchConfig, ShapeConfig
@@ -181,7 +181,7 @@ def cache_specs(cache_sds, mesh, *, batch: int):
             if path_key == "conv_x" and leaf.shape[c_dim] % dims["model"] == 0:
                 ent[c_dim] = "model"
         # pos and anything else: replicated
-        return _filter_spec(mesh, tuple(ent), leaf.shape)
+        return filter_spec(mesh, tuple(ent), leaf.shape)
 
     def walk(tree, key=""):
         if isinstance(tree, dict):
@@ -241,17 +241,17 @@ def build_train_round(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
     }
 
     batch = {"tokens": _token_sds((K, Pn, A, per_agent, shape.seq_len))}
-    batch_specs = {"tokens": _filter_spec(
+    batch_specs = {"tokens": filter_spec(
         mesh, (None, "pod", "data", plan.act_batch_axes or None, None),
         batch["tokens"].shape)}
     if cfg.family == "audio":
         batch["frames"] = jax.ShapeDtypeStruct(
             (K, Pn, A, per_agent, cfg.encoder_seq, cfg.d_model), cfg.dtype)
-        batch_specs["frames"] = _filter_spec(
+        batch_specs["frames"] = filter_spec(
             mesh, (None, "pod", "data", plan.act_batch_axes or None, None, None),
             batch["frames"].shape)
     seeds = _token_sds((K, Pn, A), jnp.uint32)
-    seeds_spec = _filter_spec(mesh, (None, "pod", "data"), seeds.shape)
+    seeds_spec = filter_spec(mesh, (None, "pod", "data"), seeds.shape)
 
     def round_fn(state, batches, seeds):
         with batch_axes(*plan.act_batch_axes):
@@ -284,13 +284,13 @@ def build_prefill(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
         fsdp_axis="data" if fsdp else None)
 
     tokens = _token_sds((B, shape.seq_len))
-    tok_spec = _filter_spec(mesh, (("pod", "data"), None), tokens.shape)
+    tok_spec = filter_spec(mesh, (("pod", "data"), None), tokens.shape)
     args_sds = [jax.eval_shape(bb.init, jax.random.key(0)), tokens]
     arg_specs = [pspecs, tok_spec]
     if cfg.family == "audio":
         frames = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
         args_sds.append(frames)
-        arg_specs.append(_filter_spec(mesh, (("pod", "data"), None, None),
+        arg_specs.append(filter_spec(mesh, (("pod", "data"), None, None),
                                       frames.shape))
 
     def prefill_fn(params, tokens, frames=None):
@@ -319,7 +319,7 @@ def build_decode(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
     cspecs = cache_specs(cache_sds, mesh, batch=B)
 
     token = _token_sds((B, 1))
-    tok_spec = _filter_spec(mesh, (("pod", "data"), None), token.shape)
+    tok_spec = filter_spec(mesh, (("pod", "data"), None), token.shape)
     index = jax.ShapeDtypeStruct((), jnp.int32)
 
     def decode_fn(params, token, cache, index):

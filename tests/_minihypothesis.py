@@ -1,0 +1,102 @@
+"""Deterministic stand-in for the `hypothesis` API surface this suite uses.
+
+The container has no hypothesis wheel and installing one is off-limits, so
+conftest registers this module as ``hypothesis`` ONLY when the real package
+is missing (real hypothesis wins whenever present).  It keeps the
+property-based tests meaningful: each ``@given`` test runs ``max_examples``
+times over seeded pseudo-random draws (seed = example index, so failures
+reproduce exactly), with min/max boundary draws front-loaded.
+
+Supported: given(**kwargs), settings(max_examples=, deadline=),
+strategies.integers / floats / lists / permutations.
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample, boundary=None):
+        self._sample = sample
+        self._boundary = boundary or []
+
+    def example(self, rng, index):
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._sample(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: int(r.randint(min_value, max_value + 1)),
+                     boundary=[min_value, max_value])
+
+
+def floats(min_value, max_value, allow_nan=True, allow_infinity=None,
+           width=64):
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(lambda r: float(r.uniform(lo, hi)), boundary=[lo, hi])
+
+
+def lists(elements, min_size=0, max_size=10):
+    def sample(r):
+        n = int(r.randint(min_size, max_size + 1))
+        return [elements._sample(r) for _ in range(n)]
+
+    return _Strategy(sample)
+
+
+def permutations(values):
+    vals = list(values)
+    return _Strategy(lambda r: [vals[i] for i in r.permutation(len(vals))],
+                     boundary=[list(vals)])
+
+
+def given(**strategies_kw):
+    def deco(fn):
+        # no functools.wraps: pytest would follow __wrapped__ and mistake the
+        # strategy parameters for fixtures; the wrapper must look zero-arg
+        def wrapper():
+            # @settings may sit above (annotating wrapper) or below
+            # (annotating fn) the @given decorator; honour both orders
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 10))
+            for i in range(n):
+                rng = np.random.RandomState(i)
+                drawn = {k: s.example(rng, i) for k, s in strategies_kw.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # reproduce like hypothesis does
+                    raise AssertionError(
+                        f"falsifying example (draw #{i}): {drawn!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._minihypothesis = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def build_module():
+    """Assemble module objects registrable as hypothesis / h.strategies."""
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.lists = lists
+    st.permutations = permutations
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    return hyp, st

@@ -7,3 +7,14 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# The container ships no hypothesis wheel (and installing one is off-limits);
+# fall back to the deterministic stub.  Real hypothesis wins when present.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _minihypothesis
+
+    _hyp, _st = _minihypothesis.build_module()
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
