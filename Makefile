@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench bench-dryrun quickstart
+.PHONY: test test-fast lint bench bench-dryrun quickstart strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -30,3 +30,8 @@ bench-dryrun:
 
 quickstart:
 	$(PY) examples/quickstart.py --K 20
+
+# SyncStrategy parity (legacy mode strings vs strategies, bit-identical)
+# + launcher strategy plumbing.
+strategies-parity:
+	$(PY) -m pytest -q tests/test_strategies.py tests/test_launch_cli.py

@@ -1,9 +1,11 @@
 """Paper §3.2 — communication complexity.
 
-Analytic accounting (2·2M/K vs 2·2M per agent per step) for every assigned
-architecture, cross-checked against the loop-aware HLO collective audit of
-the dry-run artifacts when present (agent-axis bytes only — tensor-parallel
-ICI traffic within an agent is orthogonal to the paper's claim).
+Per-strategy wire-byte accounting for every assigned architecture — each
+``SyncStrategy`` owns its own ``bytes_per_round`` (no more hand-coded
+2·2M/K formulas here) — cross-checked against the loop-aware HLO
+collective audit of the dry-run artifacts when present (agent-axis bytes
+only — tensor-parallel ICI traffic within an agent is orthogonal to the
+paper's claim).
 """
 from __future__ import annotations
 
@@ -12,24 +14,39 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.configs import get_config, list_archs
-from repro.models.adversarial import AdversarialLM
+from repro.core import FedGANConfig
+from repro.core.strategies import (FedAvgSync, Hierarchical, PartialSharing,
+                                   PerStepGradAvg)
+from repro.launch.steps import make_lm_gan_task
 
 
 def bench_analytic(K=20):
+    strategies = {
+        "fedgan": FedAvgSync(),
+        "distributed": PerStepGradAvg(),
+        "partial_sharing": PartialSharing(),
+        "fedgan_bf16": FedAvgSync(sync_dtype=jnp.bfloat16),
+        "hierarchical": Hierarchical(intra_interval=K // 4),
+    }
     for arch in list_archs():
         cfg = get_config(arch).smoke()  # param ratio is scale-free; use smoke
-        model = AdversarialLM(cfg)
-        params = jax.eval_shape(model.init, jax.random.key(0))
+        task = make_lm_gan_task(cfg)
+        params = jax.eval_shape(task.init, jax.random.key(0))
         M = sum(l.size * l.dtype.itemsize
                 for l in jax.tree_util.tree_leaves(params))
-        fed_per_step = 2 * M / K
-        dist_per_step = 2 * M
+        fcfg = FedGANConfig(agent_grid=(1, 1), sync_interval=K)
+        per_round = {name: s.bytes_per_round(fcfg, params)
+                     for name, s in strategies.items()}
+        fields = ";".join(f"{name}_B_per_step={b / K:.0f}"
+                          for name, b in per_round.items())
         emit(f"comm_{arch}", 0.0,
-             f"M_bytes={M};fedgan_B_per_step={fed_per_step:.0f};"
-             f"distributed_B_per_step={dist_per_step:.0f};ratio={K}")
+             f"M_bytes={M};{fields};"
+             f"ratio={per_round['distributed'] // per_round['fedgan']};"
+             f"partial_vs_full={per_round['partial_sharing'] / per_round['fedgan']:.3f}")
 
 
 def bench_hlo_audit(results_dir="results/dryrun"):

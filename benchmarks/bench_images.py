@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import FedGAN, FedGANConfig
+from repro.core import FedGAN, FedGANConfig, PerStepGradAvg
 from repro.data import synthetic
 from repro.evals import fd_score
 from repro.launch.train import acgan_task
@@ -21,10 +21,10 @@ from repro.optim import Adam, constant, equal_timescale
 HW = 16
 
 
-def _train_acgan(K, steps, mode="fedgan", num_classes=10, B=5, n=32, seed=0):
+def _train_acgan(K, steps, strategy=None, num_classes=10, B=5, n=32, seed=0):
     task, (G, D) = acgan_task(hw=HW, num_classes=num_classes)
     fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
-                                    mode=mode),
+                                    strategy=strategy),
                  opt_g=Adam(b1=0.5), opt_d=Adam(b1=0.5),
                  scales=equal_timescale(constant(1e-3)))
     state = fed.init_state(jax.random.key(seed))
@@ -68,11 +68,11 @@ def _fd_of(fed, state, G, num_classes, n_eval=512, seed=9):
 
 def bench_fd_vs_k(steps=400):
     """Fig 1b analog: K sweep + distributed baseline (same step budget)."""
-    fed, state, (G, D), us = _train_acgan(1, steps, mode="distributed")
+    fed, state, (G, D), us = _train_acgan(1, steps, PerStepGradAvg())
     fd_base = _fd_of(fed, state, G, 10)
     emit("fig1b_distributed_gan", us, f"fd={fd_base:.2f}")
     for K in (10, 20, 100):
-        fed, state, (G, D), us = _train_acgan(K, steps, mode="fedgan")
+        fed, state, (G, D), us = _train_acgan(K, steps)
         fd = _fd_of(fed, state, G, 10)
         emit(f"fig1b_fedgan_K{K}", us, f"fd={fd:.2f};vs_distributed={fd/max(fd_base,1e-9):.2f}x")
 
@@ -80,8 +80,7 @@ def bench_fd_vs_k(steps=400):
 def bench_celeba_attributes(steps=300):
     """Fig 2b analog: 16 attribute classes split over 5 agents."""
     for K in (10, 50):
-        fed, state, (G, D), us = _train_acgan(K, steps, mode="fedgan",
-                                              num_classes=16)
+        fed, state, (G, D), us = _train_acgan(K, steps, num_classes=16)
         fd = _fd_of(fed, state, G, 16)
         emit(f"fig2b_celeba_K{K}", us, f"fd={fd:.2f}")
 

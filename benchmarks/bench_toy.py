@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import FedGAN, FedGANConfig
+from repro.core import FedAvgSync, FedGAN, FedGANConfig, LocalOnly
 from repro.data import synthetic
 from repro.evals import mode_stats, wasserstein_1d_proj
 from repro.launch.train import mlp_gan_task, toy2d_task
@@ -48,11 +48,11 @@ def bench_2d(steps=2500):
         emit(f"fig5_2d_K{K}", us, f"dist_to_(1;0)={dist:.4f}")
 
 
-def _run_mlp_gan(sample_agent, B=4, K=5, steps=2000, n=128, mode="fedgan",
+def _run_mlp_gan(sample_agent, B=4, K=5, steps=2000, n=128, strategy=None,
                  seed=0):
     task, (G, D) = mlp_gan_task(hidden=64)
     fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
-                                    mode=mode),
+                                    strategy=strategy),
                  opt_g=Adam(), opt_d=Adam(),
                  scales=equal_timescale(constant(2e-4)))
     state = fed.init_state(jax.random.key(seed))
@@ -80,10 +80,11 @@ def bench_mixed_gaussian(steps=2000):
         return synthetic.sample_mixed_gaussian(rng, m,
                                                mode_subset=[2 * i, 2 * i + 1])
 
-    for mode in ("fedgan", "local_only"):
-        samples, us = _run_mlp_gan(agent_sample, steps=steps, mode=mode)
+    for strat in (FedAvgSync(), LocalOnly()):
+        samples, us = _run_mlp_gan(agent_sample, steps=steps, strategy=strat)
         covered, hq, _ = mode_stats(samples, modes, radius=0.5)
-        emit(f"fig6_mixed_gaussian_{mode}", us, f"modes={covered}/8;hq={hq:.2f}")
+        emit(f"fig6_mixed_gaussian_{strat.name}", us,
+             f"modes={covered}/8;hq={hq:.2f}")
 
 
 def bench_swissroll(steps=2000):

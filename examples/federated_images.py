@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.core import FedGAN, FedGANConfig
+from repro.core import FedAvgSync, FedGAN, FedGANConfig, PerStepGradAvg
 from repro.data import synthetic
 from repro.evals import fd_score
 from repro.launch.train import acgan_task
@@ -23,10 +23,10 @@ from repro.optim import Adam, constant, equal_timescale
 HW, NCLS, B = 16, 10, 5
 
 
-def train(K, steps, mode, seed=0, n=32):
+def train(K, steps, strategy, seed=0, n=32):
     task, (G, D) = acgan_task(hw=HW, num_classes=NCLS)
     fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
-                                    mode=mode),
+                                    strategy=strategy),
                  opt_g=Adam(b1=0.5), opt_d=Adam(b1=0.5),
                  scales=equal_timescale(constant(1e-3)))
     state = fed.init_state(jax.random.key(seed))
@@ -69,11 +69,11 @@ def main():
     args = ap.parse_args()
 
     print(f"FedGAN ACGAN, B={B} agents x 2 classes, K={args.K}")
-    fed, state, (G, D) = train(args.K, args.steps, "fedgan")
+    fed, state, (G, D) = train(args.K, args.steps, FedAvgSync())
     fd = evaluate(fed, state, G)
     print(f"  FedGAN      (K={args.K}): FD = {fd:.2f}")
 
-    fed_b, state_b, (Gb, _) = train(1, args.steps, "distributed")
+    fed_b, state_b, (Gb, _) = train(1, args.steps, PerStepGradAvg())
     fd_b = evaluate(fed_b, state_b, Gb)
     print(f"  distributed (K=1):  FD = {fd_b:.2f}  "
           f"(paper claim: FedGAN stays close at 1/{args.K} the communication)")

@@ -12,7 +12,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import FedGAN, FedGANConfig, GANTask, losses
+from repro.core import FedAvgSync, FedGAN, FedGANConfig, make_gan_task
 from repro.data import synthetic
 from repro.models.gan_nets import Toy2DDiscriminator, Toy2DGenerator
 from repro.optim import SGD, equal_timescale, power_decay
@@ -27,22 +27,13 @@ def main():
     B, K = args.agents, args.K
 
     G, D = Toy2DGenerator(theta0=0.5), Toy2DDiscriminator(psi0=0.5)
-
-    def init(rng):
-        kg, kd = jax.random.split(rng)
-        return {"gen": G.init(kg), "disc": D.init(kd)}
-
-    def disc_loss(params, batch, rng):
-        fake = jax.lax.stop_gradient(G.apply(params["gen"], batch["z"]))
-        return losses.ns_d_loss(D.apply(params["disc"], batch["x"]),
-                                D.apply(params["disc"], fake))
-
-    def gen_loss(params, batch, rng):
-        return losses.ns_g_loss(
-            D.apply(params["disc"], G.apply(params["gen"], batch["z"])))
-
-    task = GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss)
-    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K),
+    # the (G, D) pair + the non-saturating loss family -> a GANTask;
+    # FedAvgSync() IS the paper's intermediary (swap in PartialSharing(),
+    # Hierarchical(...), ... from repro.core.strategies to change how
+    # agents aggregate — the training loop below does not change).
+    task = make_gan_task(G, D)
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
+                                    strategy=FedAvgSync()),
                  opt_g=SGD(), opt_d=SGD(),
                  scales=equal_timescale(power_decay(0.1, tau=200, p=0.6)))
     state = fed.init_state(jax.random.key(0))

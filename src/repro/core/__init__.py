@@ -1,6 +1,7 @@
 # The paper's primary contribution: FedGAN (Algorithm 1) + its convergence
-# instrumentation (Lemmas 1-2) + the distributed-GAN comparison baseline.
-from repro.core import losses
+# instrumentation (Lemmas 1-2), the pluggable aggregation strategies, and
+# the distributed-GAN comparison baseline.
+from repro.core import losses, strategies
 from repro.core.convergence import (
     ConstantEstimates,
     estimate_constants,
@@ -17,9 +18,26 @@ from repro.core.fedgan import (
     dataset_weights,
     uniform_weights,
 )
+from repro.core.strategies import (
+    AdaptiveK,
+    FedAvgSync,
+    Hierarchical,
+    LocalOnly,
+    PartialSharing,
+    PerStepGradAvg,
+    SubsampledFedAvg,
+    SyncStrategy,
+    get_strategy,
+    strategy_from_mode,
+)
+from repro.core.tasks import ACGAN, CONDITIONAL, NS, LossSpec, make_gan_task
 
 __all__ = [
-    "ConstantEstimates", "FedGAN", "FedGANConfig", "GANTask",
-    "dataset_weights", "estimate_constants", "losses", "measure_drift",
-    "r1_bound", "r2_bound", "tree_diff_norm", "tree_norm", "uniform_weights",
+    "ACGAN", "AdaptiveK", "CONDITIONAL", "ConstantEstimates", "FedAvgSync",
+    "FedGAN", "FedGANConfig", "GANTask", "Hierarchical", "LocalOnly",
+    "LossSpec", "NS", "PartialSharing", "PerStepGradAvg", "SubsampledFedAvg",
+    "SyncStrategy", "dataset_weights", "estimate_constants", "get_strategy",
+    "losses", "make_gan_task", "measure_drift", "r1_bound", "r2_bound",
+    "strategies", "strategy_from_mode", "tree_diff_norm", "tree_norm",
+    "uniform_weights",
 ]

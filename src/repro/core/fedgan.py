@@ -13,22 +13,24 @@ the production mesh that axis is sharded over ("pod", "data"), so
 
 The same code runs unsharded on CPU for the paper's experiments (P=1, A=B).
 
-Modes
-  fedgan        local SGD for K steps, then parameter sync (the paper).
-  distributed   gradient all-reduce every step (the paper's baseline:
-                MD-GAN/FedAvg-GAN-style per-step communication).
-  local_only    never sync (ablation lower bound).
-  hierarchical  beyond-paper two-tier sync: intra-pod average every
-                ``intra_interval`` steps, full average every K.
+Aggregation is pluggable: a :class:`repro.core.strategies.SyncStrategy`
+owns when / what / how agents sync (and its own §3.2 wire-byte
+accounting).  The paper's algorithm is ``FedAvgSync()`` (the default); the
+per-step baseline is ``PerStepGradAvg()``; see ``repro.core.strategies``
+for generator-only sharing, participation subsampling, hierarchical and
+adaptive-K schedules.  The old closed-world ``mode: str`` field remains as
+a deprecated shim that resolves to the equivalent strategy.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import strategies as sync_strategies
 from repro.dist import collectives
 from repro.optim import Adam, Optimizer, TimeScales, equal_timescale, constant
 
@@ -61,8 +63,10 @@ class GANTask:
 class FedGANConfig:
     agent_grid: tuple[int, int] = (1, 5)  # (P pods, A agents/pod); B = P*A
     sync_interval: int = 20               # K
-    mode: str = "fedgan"                  # fedgan|distributed|local_only|hierarchical
-    intra_interval: int = 0               # K1 for hierarchical; must divide K
+    strategy: Any = None                  # SyncStrategy; None -> FedAvgSync
+    # -- deprecated closed-world fields, kept as a shim ---------------------
+    mode: str = ""                        # fedgan|distributed|local_only|hierarchical
+    intra_interval: int = 0               # K1 for the hierarchical shim
     sync_dtype: Any = None                # e.g. jnp.bfloat16 — compressed sync
     average_opt_state: bool = False       # optionally FedAvg the Adam moments too
 
@@ -70,12 +74,41 @@ class FedGANConfig:
     def num_agents(self) -> int:
         return self.agent_grid[0] * self.agent_grid[1]
 
+    def resolve_strategy(self) -> sync_strategies.SyncStrategy:
+        """The strategy this config denotes.  Explicit ``strategy`` wins;
+        a legacy ``mode`` string resolves through the deprecation shim.
+        Mixing the two is an error — the legacy knobs would be silently
+        ignored otherwise."""
+        if self.strategy is not None:
+            legacy = {k: v for k, v in
+                      (("mode", self.mode),
+                       ("intra_interval", self.intra_interval),
+                       ("sync_dtype", self.sync_dtype),
+                       ("average_opt_state", self.average_opt_state)) if v}
+            if legacy:
+                raise ValueError(
+                    f"strategy={self.strategy!r} conflicts with the "
+                    f"deprecated config field(s) {sorted(legacy)}; move "
+                    "them onto the strategy (e.g. "
+                    "FedAvgSync(sync_dtype=...))")
+            return self.strategy
+        if self.mode:
+            warnings.warn(
+                f"FedGANConfig(mode={self.mode!r}) is deprecated; pass "
+                "strategy= a repro.core.strategies.SyncStrategy instead "
+                f"(e.g. strategies.strategy_from_mode({self.mode!r}))",
+                DeprecationWarning, stacklevel=2)
+            return sync_strategies.strategy_from_mode(
+                self.mode, intra_interval=self.intra_interval,
+                sync_dtype=self.sync_dtype,
+                average_opt_state=self.average_opt_state)
+        return sync_strategies.FedAvgSync(
+            sync_dtype=self.sync_dtype,
+            average_opt_state=self.average_opt_state)
+
     def validate(self):
-        if self.mode == "hierarchical":
-            if not self.intra_interval or self.sync_interval % self.intra_interval:
-                raise ValueError("hierarchical mode needs intra_interval | sync_interval")
-        if self.mode not in ("fedgan", "distributed", "local_only", "hierarchical"):
-            raise ValueError(f"unknown mode {self.mode}")
+        strat = self.resolve_strategy()  # raises on unknown mode strings
+        strat.validate(self)
 
 
 def uniform_weights(cfg: FedGANConfig) -> jax.Array:
@@ -115,7 +148,8 @@ class FedGAN:
         return {**stacked, "step": jnp.zeros((), jnp.int32)}
 
     # ------------------------------------------------------------------
-    # averaging primitives
+    # averaging primitives (legacy helpers; strategies call collectives
+    # directly with their own knobs)
     # ------------------------------------------------------------------
     def _avg_full(self, tree):
         """Weighted average over (P, A) then broadcast back — eq. (2)+(3).
@@ -152,6 +186,7 @@ class FedGAN:
         """One parallel step across all agents.  step_input = (batch, seeds)
         with leading (P, A) axes."""
         batch, seeds = step_input
+        strat = self.cfg.resolve_strategy()
         n = state["step"]
         lr_a = self.scales.a(n.astype(jnp.float32))
         lr_b = self.scales.b(n.astype(jnp.float32))
@@ -162,11 +197,9 @@ class FedGAN:
 
         gd, gg, metrics = jax.vmap(jax.vmap(agent_grads))(state["params"], batch, seeds)
 
-        if self.cfg.mode == "distributed":
-            # per-step gradient averaging — the paper's distributed-GAN
-            # baseline communication pattern (every iteration).
-            gd = self._avg_full(gd)
-            gg = self._avg_full(gg)
+        # per-step aggregation hook (PerStepGradAvg averages grads here —
+        # the paper's distributed-GAN baseline communication pattern)
+        gd, gg = strat.grad_hook(self, gd, gg, state)
 
         def upd_d(d, g, s):
             return self.opt_d.update(d, g, s, lr_a)
@@ -191,36 +224,34 @@ class FedGAN:
     # ------------------------------------------------------------------
     def round(self, state, batches, seeds):
         """batches: pytree with leading (K, P, A, ...); seeds: (K, P, A) u32.
-        Runs K local steps then syncs per the configured mode."""
+        Runs K local steps then syncs per the configured strategy."""
         self.cfg.validate()
+        strat = self.cfg.resolve_strategy()
         K = self.cfg.sync_interval
+        K1 = strat.intra_interval
 
-        if self.cfg.mode == "hierarchical":
-            K1 = self.cfg.intra_interval
+        if K1:
             segs = K // K1
 
             def seg_body(st, seg_in):
                 st, m = jax.lax.scan(self._step, st, seg_in)
-                st = dict(st)
-                st["params"] = self._avg_intra_pod(st["params"])
-                return st, m
+                return strat.segment_sync(self, st), m
 
             seg_in = tmap(lambda x: x.reshape((segs, K1) + x.shape[1:]),
                           (batches, seeds))
             state, metrics = jax.lax.scan(seg_body, state, seg_in)
             metrics = tmap(lambda x: x.reshape((K,) + x.shape[2:]), metrics)
-            state = self._sync(state)
-            return state, metrics
-
-        state, metrics = jax.lax.scan(self._step, state, (batches, seeds))
-        if self.cfg.mode == "fedgan":
-            state = self._sync(state)
-        # distributed: synced every step already; local_only: never.
-        return state, metrics
+        else:
+            state, metrics = jax.lax.scan(self._step, state, (batches, seeds))
+        return strat.round_sync(self, state), metrics
 
     # ------------------------------------------------------------------
     def agent_params(self, state, p: int = 0, a: int = 0):
         return tmap(lambda x: x[p, a], state["params"])
+
+    def agent_opt_state(self, state, p: int = 0, a: int = 0):
+        return {k: tmap(lambda x: x[p, a], state[k])
+                for k in ("opt_g", "opt_d")}
 
     def averaged_params(self, state):
         """The intermediary's (w_n, theta_n) — weighted average, no broadcast."""
@@ -229,11 +260,15 @@ class FedGAN:
                     state["params"])
 
     def comm_bytes_per_round(self, state) -> dict:
-        """Analytic §3.2 accounting: FedGAN moves 2·2M per agent per ROUND
-        (send + receive of G and D), i.e. 2·2M/K per step; the distributed
-        baseline moves 2·2M per STEP."""
-        M_bytes = collectives.tree_bytes(self.agent_params(state))
+        """§3.2 accounting.  The analytic comparison (FedGAN moves 2·2M per
+        agent per ROUND, the distributed baseline 2·2M per STEP) plus the
+        configured strategy's own wire-byte accounting."""
+        strat = self.cfg.resolve_strategy()
+        params = self.agent_params(state)
+        M_bytes = collectives.tree_bytes(params)
         K = self.cfg.sync_interval
         per_round = {"fedgan": 2 * M_bytes, "distributed": 2 * M_bytes * K}
         return {"param_bytes_M": M_bytes, "per_agent_per_round": per_round,
-                "ratio": K}
+                "ratio": K, "strategy": strat.name,
+                "strategy_bytes_per_round": strat.bytes_per_round(
+                    self.cfg, params, opt=self.agent_opt_state(state))}

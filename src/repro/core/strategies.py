@@ -1,0 +1,330 @@
+"""Pluggable sync strategies — the open-world replacement for ``mode: str``.
+
+The paper's intermediary (eq. (2)+(3)) is one point in a design space that
+related work explores along three independent axes:
+
+  * WHEN to sync — every K steps (FedGAN), every step (the distributed
+    baseline), on a two-tier intra-pod/cross-pod schedule (hierarchical),
+    or adaptively across rounds (sync often while agents drift fast, then
+    back off — warmup-K);
+  * WHAT to sync — the full (G, D) parameter set, only the generator
+    subtree (PS-FedGAN, Wijesinghe et al. 2023 keep D local), optionally
+    the Adam moments too;
+  * HOW — dataset-size-weighted averaging over the agent grid, optionally
+    cast to a wire dtype (compressed sync) or restricted to a per-round
+    participation subsample (FedAvg client sampling).
+
+A :class:`SyncStrategy` owns all three plus its own §3.2 wire-byte
+accounting (:meth:`SyncStrategy.bytes_per_round`).  Strategies compose with
+``repro.dist.collectives``: every aggregation is a weighted einsum over the
+leading (P, A) agent grid, so under jit on the production mesh each strategy
+still lowers to the minimal all-reduce over the ("pod", "data") axes — a
+gen-only strategy moves strictly fewer agent-axis bytes, visible in the HLO
+audit (``repro.launch.hlo_analysis``).
+
+Strategy hooks called from ``FedGAN.round`` / ``FedGAN._step``:
+
+  ``validate(cfg)``              static config check (raise ValueError)
+  ``intra_interval``             int attr; nonzero splits the K-scan into
+                                 segments of this length (must divide K)
+  ``grad_hook(fed, gd, gg, st)`` per-step gradient transform (runs inside
+                                 the scan body, before the optimizer)
+  ``segment_sync(fed, st)``      after every ``intra_interval`` segment
+  ``round_sync(fed, st)``        after the K-step scan
+  ``bytes_per_round(cfg, params, opt=None)``
+                                 per-agent send+receive wire bytes per
+                                 round (ShapeDtypeStructs accepted)
+
+``fed`` is the :class:`repro.core.fedgan.FedGAN` instance (gives access to
+the normalised agent weights ``fed._w()`` and ``fed.cfg``); ``st`` is the
+agent-stacked state dict.  All hooks must stay jit-traceable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import collectives
+
+tmap = jax.tree_util.tree_map
+
+_OPT_KEY = {"gen": "opt_g", "disc": "opt_d"}
+
+
+def _select(mask, new, old):
+    """Per-agent select: mask (P, A) -> new where mask else old, leafwise."""
+    return tmap(
+        lambda a, x: jnp.where(mask.reshape(mask.shape + (1,) * (x.ndim - 2)),
+                               a, x), new, old)
+
+
+def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None):
+    """The eq. (2)+(3) aggregation restricted to ``subtrees`` (and optionally
+    a participation ``mask``): weighted average over (P, A), broadcast back.
+    Non-participating agents keep their local values."""
+    w = fed._w()
+    if mask is not None:
+        w = w * mask
+        w = w / jnp.sum(w)
+
+    def avg(tree):
+        out = collectives.average_agents(tree, w, sync_dtype=sync_dtype)
+        return out if mask is None else _select(mask, out, tree)
+
+    new = dict(state)
+    params = dict(state["params"])
+    for k in subtrees:
+        params[k] = avg(state["params"][k])
+    new["params"] = params
+    if average_opt_state:
+        for k in subtrees:
+            new[_OPT_KEY[k]] = avg(state[_OPT_KEY[k]])
+    return new
+
+
+class SyncStrategy:
+    """Base protocol; the defaults are the never-sync ablation."""
+
+    name = "local_only"
+    intra_interval = 0
+
+    def validate(self, cfg):
+        pass
+
+    def grad_hook(self, fed, grad_disc, grad_gen, state):
+        return grad_disc, grad_gen
+
+    def segment_sync(self, fed, state):
+        return state
+
+    def round_sync(self, fed, state):
+        return state
+
+    def bytes_per_round(self, cfg, params, opt=None) -> int:
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalOnly(SyncStrategy):
+    """Never sync (ablation lower bound)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgSync(SyncStrategy):
+    """The paper's Algorithm 1 intermediary: K local steps, then a
+    dataset-size-weighted parameter average of ``subtrees``.
+
+    ``sync_dtype`` casts leaves to a wire dtype for the average (compressed
+    sync); ``average_opt_state`` additionally FedAvgs the optimizer moments
+    of the synced subtrees.
+    """
+
+    sync_dtype: Any = None
+    average_opt_state: bool = False
+    subtrees: tuple = ("gen", "disc")
+    name = "fedgan"
+
+    def validate(self, cfg):
+        bad = [k for k in self.subtrees if k not in _OPT_KEY]
+        if bad or not self.subtrees:
+            raise ValueError(f"subtrees must be a non-empty subset of "
+                             f"{tuple(_OPT_KEY)}, got {self.subtrees}")
+
+    def participation_mask(self, fed, state):
+        """(P, A) bool mask of agents taking part in this round's sync, or
+        None for all.  Evaluated at round end (state['step'] = (r+1)*K)."""
+        return None
+
+    def round_sync(self, fed, state):
+        return _fedavg(fed, state, subtrees=self.subtrees,
+                       average_opt_state=self.average_opt_state,
+                       sync_dtype=self.sync_dtype,
+                       mask=self.participation_mask(fed, state))
+
+    def bytes_per_round(self, cfg, params, opt=None) -> int:
+        wire = sum(collectives.sync_bytes(params[k],
+                                          sync_dtype=self.sync_dtype)
+                   for k in self.subtrees)
+        if self.average_opt_state and opt is not None:
+            wire += sum(collectives.sync_bytes(opt[_OPT_KEY[k]],
+                                               sync_dtype=self.sync_dtype)
+                        for k in self.subtrees if _OPT_KEY[k] in opt)
+        return 2 * wire  # send + receive, once per round
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialSharing(FedAvgSync):
+    """PS-FedGAN-style generator-only sharing (Wijesinghe et al. 2023):
+    the intermediary averages the ``gen`` subtree; every discriminator
+    stays local, adapted to its agent's data.  Halves the wire bytes when
+    G and D are the same size, and removes D from the agent-axis
+    all-reduce entirely."""
+
+    subtrees: tuple = ("gen",)
+    name = "partial_sharing"
+
+
+@dataclasses.dataclass(frozen=True)
+class SubsampledFedAvg(FedAvgSync):
+    """Partial participation: each round, ``ceil(fraction * B)`` agents are
+    drawn (deterministically from the round index) and the participation
+    mask is folded into the weights — participants average among
+    themselves and receive the result, the rest keep their local state."""
+
+    fraction: float = 0.5
+    mask_seed: int = 0
+    name = "subsampled"
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+
+    def num_participants(self, cfg) -> int:
+        return max(1, int(round(self.fraction * cfg.num_agents)))
+
+    def participation_mask(self, fed, state):
+        P, A = fed.cfg.agent_grid
+        m = self.num_participants(fed.cfg)
+        if m == P * A:
+            return None
+        r_idx = state["step"] // fed.cfg.sync_interval - 1
+        key = jax.random.fold_in(jax.random.key(self.mask_seed), r_idx)
+        scores = jax.random.uniform(key, (P, A))
+        kth = jnp.sort(scores.reshape(-1))[-m]
+        return scores >= kth
+
+    def bytes_per_round(self, cfg, params, opt=None) -> int:
+        # fleet-average per agent: only m of B agents hit the wire per round
+        full = super().bytes_per_round(cfg, params, opt)
+        return full * self.num_participants(cfg) // cfg.num_agents
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveK(FedAvgSync):
+    """Warmup-K: sync every round for the first ``warmup_rounds`` rounds
+    (agents drift fastest early), then only every ``sync_every`` rounds —
+    an effective interval of K·sync_every at steady state."""
+
+    warmup_rounds: int = 4
+    sync_every: int = 2
+    name = "adaptive_k"
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        if self.warmup_rounds < 0 or self.sync_every < 1:
+            raise ValueError("need warmup_rounds >= 0 and sync_every >= 1")
+
+    def round_sync(self, fed, state):
+        r = state["step"] // fed.cfg.sync_interval - 1
+        do = jnp.logical_or(
+            r < self.warmup_rounds,
+            (r - self.warmup_rounds + 1) % self.sync_every == 0)
+        return jax.lax.cond(do,
+                            lambda s: FedAvgSync.round_sync(self, fed, s),
+                            lambda s: s, state)
+
+    def bytes_per_round(self, cfg, params, opt=None) -> int:
+        # steady-state amortised (post-warmup) cost
+        return super().bytes_per_round(cfg, params, opt) // self.sync_every
+
+
+@dataclasses.dataclass(frozen=True)
+class PerStepGradAvg(SyncStrategy):
+    """The paper's distributed-GAN baseline: gradient all-reduce every
+    step (MD-GAN / FedAvg-GAN-style per-step communication)."""
+
+    sync_dtype: Any = None
+    name = "distributed"
+
+    def grad_hook(self, fed, grad_disc, grad_gen, state):
+        w = fed._w()
+        return (collectives.average_agents(grad_disc, w,
+                                           sync_dtype=self.sync_dtype),
+                collectives.average_agents(grad_gen, w,
+                                           sync_dtype=self.sync_dtype))
+
+    def bytes_per_round(self, cfg, params, opt=None) -> int:
+        wire = collectives.sync_bytes(params, sync_dtype=self.sync_dtype)
+        return 2 * wire * cfg.sync_interval
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchical(FedAvgSync):
+    """Two-tier sync for multi-pod meshes: weighted intra-pod average every
+    ``intra_interval`` steps (fast ICI), full cross-pod average every K
+    (slower DCI)."""
+
+    intra_interval: int = 0
+    name = "hierarchical"
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        if not self.intra_interval or cfg.sync_interval % self.intra_interval:
+            raise ValueError("hierarchical sync needs intra_interval | "
+                             "sync_interval (got "
+                             f"{self.intra_interval} vs {cfg.sync_interval})")
+
+    def segment_sync(self, fed, state):
+        new = dict(state)
+        new["params"] = collectives.average_intra_pod(state["params"],
+                                                      fed._w())
+        return new
+
+    def bytes_per_round(self, cfg, params, opt=None) -> int:
+        full = FedAvgSync.bytes_per_round(self, cfg, params, opt)
+        n_segs = cfg.sync_interval // self.intra_interval
+        # segment_sync moves the WHOLE params tree at storage dtype (no
+        # sync_dtype cast, no opt state) on the cheap intra-pod links;
+        # the cross-pod round sync gets the FedAvgSync treatment
+        intra = 2 * collectives.sync_bytes(params)
+        return full + n_segs * intra
+
+
+# ---------------------------------------------------------------------------
+# Registry + legacy-mode shim
+# ---------------------------------------------------------------------------
+
+STRATEGIES = {
+    "fedgan": FedAvgSync,
+    "distributed": PerStepGradAvg,
+    "local_only": LocalOnly,
+    "hierarchical": Hierarchical,
+    "partial_sharing": PartialSharing,
+    "ps_fedgan": PartialSharing,
+    "subsampled": SubsampledFedAvg,
+    "adaptive_k": AdaptiveK,
+}
+
+
+def get_strategy(name: str, **kwargs) -> SyncStrategy:
+    """Instantiate a registered strategy by name (the CLI entry point)."""
+    try:
+        cls = STRATEGIES[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"known: {sorted(STRATEGIES)}") from None
+    return cls(**kwargs)
+
+
+def strategy_from_mode(mode: str, *, intra_interval: int = 0,
+                       sync_dtype=None,
+                       average_opt_state: bool = False) -> SyncStrategy:
+    """Resolve a legacy ``FedGANConfig.mode`` string (+ its companion config
+    fields) to the equivalent strategy.  Bit-identical to the pre-strategy
+    hard-coded paths."""
+    if mode == "fedgan":
+        return FedAvgSync(sync_dtype=sync_dtype,
+                          average_opt_state=average_opt_state)
+    if mode == "distributed":
+        return PerStepGradAvg(sync_dtype=sync_dtype)
+    if mode == "local_only":
+        return LocalOnly()
+    if mode == "hierarchical":
+        return Hierarchical(intra_interval=intra_interval,
+                            sync_dtype=sync_dtype,
+                            average_opt_state=average_opt_state)
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,76 @@
+"""Declarative GANTask builder: (G, D, LossSpec) -> GANTask.
+
+Every paper experiment pairs a generator and discriminator with one of two
+adversarial objectives, differing only in which batch fields feed each
+network.  ``make_gan_task`` captures that whole family, replacing the
+per-experiment copy-pasted init/disc_loss/gen_loss closures:
+
+  * toy2d / MLP GANs      — make_gan_task(G, D)                       (NS)
+  * conditional 1D GAN    — make_gan_task(G, D, CONDITIONAL)          (NS,
+                            G and D both see the label)
+  * ACGAN images          — make_gan_task(G, D, ACGAN)                (D
+                            returns (real/fake, class logits))
+
+Batch protocol: ``x`` real data, ``z`` latent noise, ``y`` labels (only for
+conditional specs).  Losses stop-gradient the other player (simultaneous
+updates, eq. (1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import losses
+from repro.core.fedgan import GANTask
+
+
+@dataclasses.dataclass(frozen=True)
+class LossSpec:
+    kind: str = "ns"         # "ns" (non-saturating GAN) | "acgan"
+    cond_gen: bool = False   # G.apply(params, z, y) instead of (params, z)
+    cond_disc: bool = False  # D.apply(params, x, y) instead of (params, x)
+
+
+NS = LossSpec()
+CONDITIONAL = LossSpec(cond_gen=True, cond_disc=True)
+ACGAN = LossSpec(kind="acgan", cond_gen=True)
+
+
+def make_gan_task(G, D, spec: LossSpec = NS) -> GANTask:
+    """Build the GANTask for a (G, D) pair under ``spec``."""
+    if spec.kind not in ("ns", "acgan"):
+        raise ValueError(f"unknown loss kind {spec.kind!r}")
+
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": G.init(kg), "disc": D.init(kd)}
+
+    def fake_of(params, batch):
+        args = (batch["z"], batch["y"]) if spec.cond_gen else (batch["z"],)
+        return G.apply(params["gen"], *args)
+
+    def d_of(params, x, batch):
+        args = (x, batch["y"]) if spec.cond_disc else (x,)
+        return D.apply(params["disc"], *args)
+
+    if spec.kind == "ns":
+        def disc_loss(params, batch, rng):
+            fake = jax.lax.stop_gradient(fake_of(params, batch))
+            return losses.ns_d_loss(d_of(params, batch["x"], batch),
+                                    d_of(params, fake, batch))
+
+        def gen_loss(params, batch, rng):
+            return losses.ns_g_loss(d_of(params, fake_of(params, batch), batch))
+    else:  # acgan: D returns (real/fake logit, class logits)
+        def disc_loss(params, batch, rng):
+            fake = jax.lax.stop_gradient(fake_of(params, batch))
+            rb, rc = D.apply(params["disc"], batch["x"])
+            fb, fc = D.apply(params["disc"], fake)
+            return losses.acgan_d_loss(rb, fb, rc, fc, batch["y"])
+
+        def gen_loss(params, batch, rng):
+            fb, fc = D.apply(params["disc"], fake_of(params, batch))
+            return losses.acgan_g_loss(fb, fc, batch["y"])
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss)

@@ -38,6 +38,11 @@ def average_agents(tree, weights, *, sync_dtype=None):
     """
 
     def avg(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            # integer/bool state (e.g. the Adam step count) is identical
+            # across lockstep agents; averaging with float weights would
+            # truncate it to zero
+            return x
         xs = x.astype(sync_dtype) if sync_dtype is not None else x
         m = jnp.einsum("pa,pa...->...", weights.astype(xs.dtype), xs)
         return jnp.broadcast_to(m.astype(x.dtype), x.shape)
@@ -51,6 +56,8 @@ def average_intra_pod(tree, weights):
     w_intra = weights / jnp.sum(weights, axis=1, keepdims=True)
 
     def avg(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x
         m = jnp.einsum("pa,pa...->p...", w_intra.astype(x.dtype), x)
         return jnp.broadcast_to(m[:, None], x.shape)
 

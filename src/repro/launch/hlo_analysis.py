@@ -152,7 +152,11 @@ class CollectiveStats:
                                   self.bytes_by_group_size.items()}}
 
 
-def collective_bytes(hlo_text: str) -> CollectiveStats:
+def collective_bytes(hlo_text: str, *, skip_loops: bool = False) -> CollectiveStats:
+    """``skip_loops=True`` drops every while-body contribution — what's left
+    is the once-per-call traffic (e.g. the FedGAN round's post-scan
+    parameter sync), separating it from the per-step collectives the trip
+    counts would otherwise drown it in."""
     comps, entry = _split_computations(hlo_text)
     memo: dict = {}
 
@@ -177,6 +181,8 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
                 by_gs[gs] += b
             wm = _WHILE_RE.search(line)
             if wm:
+                if skip_loops:
+                    continue
                 _, body = wm.groups()
                 tm = _TRIP_RE.search(line)
                 trip = int(tm.group(1)) if tm else 1

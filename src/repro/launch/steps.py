@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fedgan import FedGAN, FedGANConfig, GANTask
+from repro.core.strategies import strategy_from_mode
 from repro.dist.sharding import (batch_axes, filter_spec, named_shardings,
                                  param_specs, shape_of)
 from repro.launch.mesh import mesh_dims
@@ -214,21 +215,25 @@ def _token_sds(shape, dtype=jnp.int32):
 
 def build_train_round(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
                       plan: MeshPlan = AGENTS_DATA, K: int = 20,
-                      mode: str = "fedgan", sync_dtype=None,
+                      strategy=None, mode: str = "fedgan", sync_dtype=None,
                       intra_interval: int = 0,
                       adv_weight: float = 0.1) -> BuiltStep:
-    """The FedGAN round for the LM adversarial task on this mesh."""
+    """The FedGAN round for the LM adversarial task on this mesh.  Pass a
+    ``repro.core.strategies.SyncStrategy`` as ``strategy``; the legacy
+    ``mode``/``sync_dtype``/``intra_interval`` trio resolves to one."""
     Pn, A = plan.agent_grid(mesh)
     B_agents = Pn * A
     if shape.global_batch % B_agents:
         raise ValueError(f"global_batch {shape.global_batch} % {B_agents} agents")
     per_agent = shape.global_batch // B_agents
 
+    if strategy is None:
+        strategy = strategy_from_mode(mode, intra_interval=intra_interval,
+                                      sync_dtype=sync_dtype)
     task = make_lm_gan_task(cfg, adv_weight=adv_weight)
     fed = FedGAN(task,
-                 FedGANConfig(agent_grid=(Pn, A), sync_interval=K, mode=mode,
-                              sync_dtype=sync_dtype,
-                              intra_interval=intra_interval),
+                 FedGANConfig(agent_grid=(Pn, A), sync_interval=K,
+                              strategy=strategy),
                  opt_g=Adam(), opt_d=Adam(),
                  scales=equal_timescale(constant(1e-4)))
 
@@ -267,7 +272,8 @@ def build_train_round(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
         input_sds=(state_sds, batch, seeds),
         in_shardings=in_shardings,
         out_shardings=out_shardings,
-        meta={"kind": "train", "plan": plan.name, "K": K, "mode": mode,
+        meta={"kind": "train", "plan": plan.name, "K": K,
+              "mode": strategy.name,
               "agents": B_agents, "per_agent_batch": per_agent,
               "state_specs": state_specs},
     )

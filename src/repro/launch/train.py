@@ -7,72 +7,54 @@ Two entry modes:
                              backbone at reduced scale (smoke-size by
                              default; full scale only makes sense on TPU)
 
-Examples:
+Aggregation is selected with --strategy (see repro.core.strategies), e.g.:
+
   PYTHONPATH=src python -m repro.launch.train --experiment toy_2d --K 20
+  PYTHONPATH=src python -m repro.launch.train --experiment toy_2d \
+      --strategy hierarchical --intra-interval 5
+  PYTHONPATH=src python -m repro.launch.train --experiment swiss_roll \
+      --strategy partial_sharing --sync-dtype bf16
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-2.7b --steps 40
+
+The legacy --mode flag still works (it resolves through the deprecation
+shim, including the hierarchical/--intra-interval plumbing that used to be
+unreachable from the CLI).
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
+import dataclasses
 import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
-from repro.core import FedGAN, FedGANConfig, GANTask, losses
+from repro.core import (ACGAN, CONDITIONAL, FedGAN, FedGANConfig, GANTask,
+                        make_gan_task, strategies)
 from repro.data import FederatedRounds, synthetic
-from repro.optim import Adam, SGD, constant, constant_ttur, equal_timescale, power_decay
+from repro.optim import Adam, constant, equal_timescale
 
 tmap = jax.tree_util.tree_map
 
 
 # ---------------------------------------------------------------------------
-# Paper experiment tasks
+# Paper experiment tasks (all through the make_gan_task factory)
 # ---------------------------------------------------------------------------
 
 
 def toy2d_task():
     from repro.models.gan_nets import Toy2DDiscriminator, Toy2DGenerator
     G, D = Toy2DGenerator(theta0=0.5), Toy2DDiscriminator(psi0=0.5)
-
-    def init(rng):
-        kg, kd = jax.random.split(rng)
-        return {"gen": G.init(kg), "disc": D.init(kd)}
-
-    def disc_loss(params, batch, rng):
-        fake = jax.lax.stop_gradient(G.apply(params["gen"], batch["z"]))
-        return losses.ns_d_loss(D.apply(params["disc"], batch["x"]),
-                                D.apply(params["disc"], fake))
-
-    def gen_loss(params, batch, rng):
-        fake = G.apply(params["gen"], batch["z"])
-        return losses.ns_g_loss(D.apply(params["disc"], fake))
-
-    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+    return make_gan_task(G, D), (G, D)
 
 
 def mlp_gan_task(data_dim=2, latent=2, hidden=128):
     from repro.models.gan_nets import MLPDiscriminator, MLPGenerator
     G = MLPGenerator(latent_dim=latent, out_dim=data_dim, hidden=hidden)
     D = MLPDiscriminator(in_dim=data_dim, hidden=hidden)
-
-    def init(rng):
-        kg, kd = jax.random.split(rng)
-        return {"gen": G.init(kg), "disc": D.init(kd)}
-
-    def disc_loss(params, batch, rng):
-        fake = jax.lax.stop_gradient(G.apply(params["gen"], batch["z"]))
-        return losses.ns_d_loss(D.apply(params["disc"], batch["x"]),
-                                D.apply(params["disc"], fake))
-
-    def gen_loss(params, batch, rng):
-        fake = G.apply(params["gen"], batch["z"])
-        return losses.ns_g_loss(D.apply(params["disc"], fake))
-
-    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+    return make_gan_task(G, D), (G, D)
 
 
 def acgan_task(hw=16, channels=3, num_classes=10, latent=62):
@@ -80,87 +62,96 @@ def acgan_task(hw=16, channels=3, num_classes=10, latent=62):
     G = ACGANGenerator(latent_dim=latent, num_classes=num_classes, image_hw=hw,
                        channels=channels)
     D = ACGANDiscriminator(num_classes=num_classes, image_hw=hw, channels=channels)
-
-    def init(rng):
-        kg, kd = jax.random.split(rng)
-        return {"gen": G.init(kg), "disc": D.init(kd)}
-
-    def disc_loss(params, batch, rng):
-        img, lab, z = batch["x"], batch["y"], batch["z"]
-        fake = jax.lax.stop_gradient(G.apply(params["gen"], z, lab))
-        rb, rc = D.apply(params["disc"], img)
-        fb, fc = D.apply(params["disc"], fake)
-        return losses.acgan_d_loss(rb, fb, rc, fc, lab)
-
-    def gen_loss(params, batch, rng):
-        lab, z = batch["y"], batch["z"]
-        fake = G.apply(params["gen"], z, lab)
-        fb, fc = D.apply(params["disc"], fake)
-        return losses.acgan_g_loss(fb, fc, lab)
-
-    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+    return make_gan_task(G, D, ACGAN), (G, D)
 
 
 def cgan1d_task(seq_len=24, label_dim=5):
     from repro.models.gan_nets import CGAN1DDiscriminator, CGAN1DGenerator
     G = CGAN1DGenerator(seq_len=seq_len, label_dim=label_dim)
     D = CGAN1DDiscriminator(seq_len=seq_len, label_dim=label_dim)
-
-    def init(rng):
-        kg, kd = jax.random.split(rng)
-        return {"gen": G.init(kg), "disc": D.init(kd)}
-
-    def disc_loss(params, batch, rng):
-        x, lab, z = batch["x"], batch["y"], batch["z"]
-        fake = jax.lax.stop_gradient(G.apply(params["gen"], z, lab))
-        return losses.ns_d_loss(D.apply(params["disc"], x, lab),
-                                D.apply(params["disc"], fake, lab))
-
-    def gen_loss(params, batch, rng):
-        lab, z = batch["y"], batch["z"]
-        fake = G.apply(params["gen"], z, lab)
-        return losses.ns_g_loss(D.apply(params["disc"], fake, lab))
-
-    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss), (G, D)
+    return make_gan_task(G, D, CONDITIONAL), (G, D)
 
 
 # ---------------------------------------------------------------------------
-# Trainer loop (simulation mode: agents stacked on one host)
+# RunSpec: one value object instead of the kwargs soup
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Everything one simulated federated GAN run needs (agents stacked on
+    one host).  ``build()`` gives the (FedGAN, FederatedRounds) pair;
+    ``run()`` executes the round loop."""
+
+    task: GANTask
+    agent_data: list
+    agent_grid: tuple[int, int] = (1, 5)
+    K: int = 20
+    steps: int = 100
+    batch_size: int = 64
+    scales: Any = None              # None -> equal_timescale(constant(1e-3))
+    opt_g: Any = dataclasses.field(default_factory=Adam)
+    opt_d: Any = dataclasses.field(default_factory=Adam)
+    strategy: Any = None            # SyncStrategy; None -> FedAvgSync
+    sample_extra: Any = None
+    weights: Any = None
+    seed: int = 0
+    log_every: int = 1
+    ckpt_dir: str = ""
+
+    def build(self):
+        fed = FedGAN(self.task,
+                     FedGANConfig(agent_grid=self.agent_grid,
+                                  sync_interval=self.K,
+                                  strategy=self.strategy),
+                     opt_g=self.opt_g, opt_d=self.opt_d,
+                     scales=self.scales or equal_timescale(constant(1e-3)),
+                     weights=self.weights)
+        rounds = FederatedRounds(self.agent_data, self.agent_grid,
+                                 self.batch_size, self.K,
+                                 sample_extra=self.sample_extra)
+        return fed, rounds
+
+    def run(self):
+        fed, rounds = self.build()
+        state = fed.init_state(jax.random.key(self.seed))
+        round_fn = jax.jit(fed.round)
+        rng = jax.random.key(self.seed + 1)
+        history = []
+        n_rounds = max(self.steps // self.K, 1)
+        t0 = time.time()
+        for r in range(n_rounds):
+            rng, rb = jax.random.split(rng)
+            batches, seeds = rounds.round_batches(rb)
+            state, metrics = round_fn(state, batches, seeds)
+            m = tmap(lambda x: float(jnp.mean(x)), metrics)
+            history.append(m)
+            if self.log_every and (r % self.log_every == 0 or r == n_rounds - 1):
+                print(f"round {r:5d}/{n_rounds} step {(r+1)*self.K:6d} "
+                      f"d_loss={m['d_loss']:.4f} g_loss={m['g_loss']:.4f} "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+            if self.ckpt_dir and (r + 1) % max(n_rounds // 4, 1) == 0:
+                save_checkpoint(self.ckpt_dir, state, step=(r + 1) * self.K,
+                                metadata={"round": r, "K": self.K})
+        return fed, state, history
 
 
 def train_fedgan(task, *, agent_data, agent_grid, K, steps, batch_size,
-                 scales, opt_d, opt_g, mode="fedgan", sample_extra=None,
-                 seed=0, log_every=1, ckpt_dir="", weights=None):
-    fed = FedGAN(task, FedGANConfig(agent_grid=agent_grid, sync_interval=K,
-                                    mode=mode),
-                 opt_g=opt_g, opt_d=opt_d, scales=scales, weights=weights)
-    state = fed.init_state(jax.random.key(seed))
-    rounds = FederatedRounds(agent_data, agent_grid, batch_size, K,
-                             sample_extra=sample_extra)
-    round_fn = jax.jit(fed.round)
-    rng = jax.random.key(seed + 1)
-    history = []
-    n_rounds = max(steps // K, 1)
-    t0 = time.time()
-    for r in range(n_rounds):
-        rng, rb = jax.random.split(rng)
-        batches, seeds = rounds.round_batches(rb)
-        state, metrics = round_fn(state, batches, seeds)
-        m = tmap(lambda x: float(jnp.mean(x)), metrics)
-        history.append(m)
-        if log_every and (r % log_every == 0 or r == n_rounds - 1):
-            print(f"round {r:5d}/{n_rounds} step {(r+1)*K:6d} "
-                  f"d_loss={m['d_loss']:.4f} g_loss={m['g_loss']:.4f} "
-                  f"({time.time()-t0:.1f}s)", flush=True)
-        if ckpt_dir and (r + 1) % max(n_rounds // 4, 1) == 0:
-            save_checkpoint(ckpt_dir, state, step=(r + 1) * K,
-                            metadata={"round": r, "K": K})
-    return fed, state, history
+                 scales, opt_d, opt_g, strategy=None, mode="",
+                 sample_extra=None, seed=0, log_every=1, ckpt_dir="",
+                 weights=None):
+    """Compat wrapper over RunSpec (prefer RunSpec(...).run() directly)."""
+    if strategy is None and mode:
+        strategy = strategies.strategy_from_mode(mode)
+    return RunSpec(task=task, agent_data=agent_data, agent_grid=agent_grid,
+                   K=K, steps=steps, batch_size=batch_size, scales=scales,
+                   opt_g=opt_g, opt_d=opt_d, strategy=strategy,
+                   sample_extra=sample_extra, weights=weights, seed=seed,
+                   log_every=log_every, ckpt_dir=ckpt_dir).run()
 
 
 def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
-                   mode: str, ckpt_dir: str):
+                   strategy=None, ckpt_dir: str = ""):
     from repro.configs.paper_gans import ALL_EXPERIMENTS, optimizer_for, scales_for
     exp = ALL_EXPERIMENTS[name]
     K = K or exp.default_K
@@ -212,15 +203,14 @@ def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
         raise KeyError(name)
 
     opt_d, opt_g = optimizer_for(exp)
-    fed, state, hist = train_fedgan(
-        task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
+    return RunSpec(
+        task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
         batch_size=exp.batch_size, scales=scales_for(exp), opt_d=opt_d,
-        opt_g=opt_g, mode=mode, sample_extra=extra, seed=seed,
-        log_every=max((steps // K) // 10, 1), ckpt_dir=ckpt_dir)
-    return fed, state, hist
+        opt_g=opt_g, strategy=strategy, sample_extra=extra, seed=seed,
+        log_every=max((steps // K) // 10, 1), ckpt_dir=ckpt_dir).run()
 
 
-def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int):
+def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None):
     """Federated adversarial training of a reduced assigned backbone."""
     from repro.configs import get_config
     from repro.launch.steps import make_lm_gan_task
@@ -237,30 +227,93 @@ def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int):
             d["frames"] = 0.1 * jax.random.normal(
                 jax.random.fold_in(rng, 50 + i), (256, cfg.encoder_seq, cfg.d_model))
         agent_data.append(d)
-    fed, state, hist = train_fedgan(
-        task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
+    return RunSpec(
+        task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
         batch_size=8, scales=equal_timescale(constant(1e-3)),
-        opt_d=Adam(), opt_g=Adam(), seed=seed, log_every=1)
-    return fed, state, hist
+        opt_d=Adam(), opt_g=Adam(), strategy=strategy, seed=seed,
+        log_every=1).run()
 
 
-def main():
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+_SYNC_DTYPES = {"": None, "f32": jnp.float32, "bf16": jnp.bfloat16,
+                "bfloat16": jnp.bfloat16, "f16": jnp.float16}
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--experiment", default="")
     ap.add_argument("--arch", default="")
     ap.add_argument("--K", type=int, default=0)
     ap.add_argument("--steps", type=int, default=0)
-    ap.add_argument("--mode", default="fedgan")
+    ap.add_argument("--strategy", default="",
+                    choices=[""] + sorted(strategies.STRATEGIES))
+    ap.add_argument("--mode", default="",
+                    help="DEPRECATED: legacy mode string (use --strategy)")
+    ap.add_argument("--intra-interval", type=int, default=0,
+                    help="hierarchical: steps between intra-pod averages")
+    ap.add_argument("--sync-dtype", default="", choices=sorted(_SYNC_DTYPES),
+                    help="wire dtype for compressed sync (e.g. bf16)")
+    ap.add_argument("--average-opt-state", action="store_true",
+                    help="FedAvg the optimizer moments along with the params")
+    ap.add_argument("--participation", type=float, default=0.0,
+                    help="subsampled: per-round participating fraction")
+    ap.add_argument("--warmup-rounds", type=int, default=0,
+                    help="adaptive_k: rounds that sync every round")
+    ap.add_argument("--sync-every", type=int, default=0,
+                    help="adaptive_k: post-warmup rounds between syncs")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
+    return ap
+
+
+def strategy_from_args(args) -> strategies.SyncStrategy | None:
+    """CLI flags -> SyncStrategy (None keeps the library default).  A knob
+    that the chosen strategy does not declare is an error, not a silent
+    no-op (mirroring FedGANConfig.resolve_strategy's conflict check)."""
+    sync_dtype = _SYNC_DTYPES[args.sync_dtype]
+    if args.strategy:
+        cls = strategies.STRATEGIES[args.strategy]
+        fields = {f.name for f in dataclasses.fields(cls)}
+        requested = {}
+        if args.sync_dtype:
+            requested["sync_dtype"] = sync_dtype
+        if args.average_opt_state:
+            requested["average_opt_state"] = True
+        if args.intra_interval:
+            requested["intra_interval"] = args.intra_interval
+        if args.participation:
+            requested["fraction"] = args.participation
+        if args.warmup_rounds:
+            requested["warmup_rounds"] = args.warmup_rounds
+        if args.sync_every:
+            requested["sync_every"] = args.sync_every
+        stray = sorted(set(requested) - fields)
+        if stray:
+            raise ValueError(
+                f"--strategy {args.strategy} does not accept {stray} "
+                f"(its knobs: {sorted(fields)})")
+        return strategies.get_strategy(args.strategy, **requested)
+    if args.mode:
+        return strategies.strategy_from_mode(
+            args.mode, intra_interval=args.intra_interval,
+            sync_dtype=sync_dtype, average_opt_state=args.average_opt_state)
+    return None
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
+    strategy = strategy_from_args(args)
 
     if args.experiment:
         run_experiment(args.experiment, K=args.K or None, steps=args.steps or None,
-                       seed=args.seed, mode=args.mode, ckpt_dir=args.ckpt_dir)
+                       seed=args.seed, strategy=strategy, ckpt_dir=args.ckpt_dir)
     elif args.arch:
         run_arch_smoke(args.arch, steps=args.steps or 20, K=args.K or 5,
-                       seed=args.seed)
+                       seed=args.seed, strategy=strategy)
     else:
         ap.error("need --experiment or --arch")
 

@@ -1,0 +1,97 @@
+"""Launcher plumbing: the CLI must reach every strategy knob.
+
+Regression for the pre-strategy gap where ``--mode hierarchical`` always
+raised ValueError because ``intra_interval`` (and ``sync_dtype`` /
+``average_opt_state``) were not exposed by ``repro.launch.train``.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.strategies import (AdaptiveK, FedAvgSync, Hierarchical,
+                                   PartialSharing, SubsampledFedAvg)
+from repro.launch.train import (RunSpec, build_parser, run_experiment,
+                                strategy_from_args, toy2d_task)
+
+
+def _args(*argv):
+    return build_parser().parse_args(list(argv))
+
+
+def test_mode_hierarchical_cli_plumbing():
+    """--mode hierarchical + --intra-interval must resolve (the old
+    launcher dropped intra_interval on the floor)."""
+    args = _args("--experiment", "toy_2d", "--mode", "hierarchical",
+                 "--intra-interval", "2")
+    strat = strategy_from_args(args)
+    assert isinstance(strat, Hierarchical) and strat.intra_interval == 2
+
+
+def test_legacy_sync_knobs_reach_strategy():
+    args = _args("--experiment", "toy_2d", "--mode", "fedgan",
+                 "--sync-dtype", "bf16", "--average-opt-state")
+    strat = strategy_from_args(args)
+    assert isinstance(strat, FedAvgSync)
+    assert strat.sync_dtype == jnp.bfloat16 and strat.average_opt_state
+
+
+def test_strategy_flag_selects_and_parameterises():
+    cases = [
+        (("--strategy", "partial_sharing"), PartialSharing, {}),
+        (("--strategy", "subsampled", "--participation", "0.25"),
+         SubsampledFedAvg, {"fraction": 0.25}),
+        (("--strategy", "adaptive_k", "--warmup-rounds", "3",
+          "--sync-every", "4"), AdaptiveK,
+         {"warmup_rounds": 3, "sync_every": 4}),
+        (("--strategy", "hierarchical", "--intra-interval", "5"),
+         Hierarchical, {"intra_interval": 5}),
+    ]
+    for argv, cls, want in cases:
+        strat = strategy_from_args(_args("--experiment", "toy_2d", *argv))
+        assert isinstance(strat, cls)
+        for k, v in want.items():
+            assert getattr(strat, k) == v, (argv, k)
+
+
+def test_no_flags_keeps_library_default():
+    assert strategy_from_args(_args("--experiment", "toy_2d")) is None
+
+
+def test_stray_knob_for_strategy_is_an_error():
+    """A knob the chosen strategy doesn't declare must fail loudly."""
+    with pytest.raises(ValueError, match="does not accept"):
+        strategy_from_args(_args("--experiment", "toy_2d",
+                                 "--strategy", "fedgan",
+                                 "--intra-interval", "5"))
+    with pytest.raises(ValueError, match="does not accept"):
+        strategy_from_args(_args("--experiment", "toy_2d",
+                                 "--strategy", "subsampled",
+                                 "--warmup-rounds", "3"))
+
+
+def test_run_experiment_hierarchical_end_to_end():
+    """The crash repro: a hierarchical toy_2d run must train, not raise."""
+    fed, state, hist = run_experiment(
+        "toy_2d", K=2, steps=4, seed=0,
+        strategy=Hierarchical(intra_interval=1))
+    assert len(hist) == 2
+    assert fed.cfg.resolve_strategy().name == "hierarchical"
+
+
+def test_runspec_builder_round_trip():
+    import jax
+    task, _ = toy2d_task()
+    from repro.data import synthetic
+    B = 3
+    rng = jax.random.key(0)
+    data = [{"x": synthetic.sample_2d_segment(jax.random.fold_in(rng, i),
+                                              256, i, B)} for i in range(B)]
+    spec = RunSpec(task=task, agent_data=data, agent_grid=(1, B), K=2,
+                   steps=4, batch_size=16, strategy=PartialSharing(),
+                   sample_extra=lambda r, s: {
+                       "z": jax.random.uniform(r, s, minval=-1, maxval=1)},
+                   log_every=0)
+    fed, rounds = spec.build()
+    assert fed.cfg.sync_interval == 2
+    assert fed.cfg.resolve_strategy() == PartialSharing()
+    _, state, hist = spec.run()
+    assert len(hist) == 2 and "d_loss" in hist[0]

@@ -129,6 +129,54 @@ print("DP_WINS", base[0] / max(dp[0], 1))
     assert "DP_WINS" in res.stdout
 
 
+def test_partial_sharing_shrinks_agent_axis_bytes():
+    """PS-FedGAN-style gen-only sync must move strictly fewer agent-axis
+    all-reduce bytes than full FedAvg in the compiled round, by about the
+    discriminator's share of the parameter bytes (HLO audit)."""
+    code = """
+import jax, jax.numpy as jnp
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.launch.steps import build_step, make_lm_gan_task
+from repro.launch.mesh import make_test_mesh
+from repro.launch.hlo_analysis import collective_bytes
+from repro.core.strategies import FedAvgSync, PartialSharing
+from repro.dist.collectives import tree_bytes
+mesh = make_test_mesh((2, 4), ("data", "model"))
+cfg = ArchConfig(name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+                 num_kv_heads=2, d_ff=128, vocab_size=512, dtype=jnp.float32,
+                 remat=False, disc_layers=2, disc_d_model=32, disc_heads=2)
+tr = ShapeConfig("train", 128, 8, "train")
+params = jax.eval_shape(make_lm_gan_task(cfg).init, jax.random.key(0))
+gen_frac = tree_bytes(params["gen"]) / tree_bytes(params)
+out = {}
+for name, strat in (("full", FedAvgSync()), ("partial", PartialSharing())):
+    built = build_step(cfg, tr, mesh, K=2, strategy=strat)
+    import json as _json  # dryrun JSON-dumps meta (minus state_specs)
+    _json.dumps({k: v for k, v in built.meta.items() if k != "state_specs"})
+    with jax.set_mesh(mesh):
+        comp = jax.jit(built.fn, in_shardings=built.in_shardings,
+                       out_shardings=built.out_shardings).lower(*built.input_sds).compile()
+    txt = comp.as_text()
+    # skip_loops drops the per-step in-scan traffic, leaving the
+    # once-per-round parameter sync this strategy choice controls
+    sync = collective_bytes(txt, skip_loops=True).bytes_by_axis(
+        {"data": 2, "model": 4})
+    out[name] = (sync["agent"],
+                 collective_bytes(txt).bytes_by_axis({"data": 2, "model": 4})["agent"])
+assert 0 < out["partial"][0] < out["full"][0], out
+assert out["partial"][1] < out["full"][1], out   # total shrinks too
+ratio = out["partial"][0] / out["full"][0]
+assert abs(ratio - gen_frac) < 0.15, (ratio, gen_frac)
+print("PARTIAL_SHRINKS", ratio, gen_frac)
+"""
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "PARTIAL_SHRINKS" in res.stdout
+
+
 @pytest.mark.parametrize("shape_kind", ["train", "prefill", "decode"])
 def test_small_mesh_lower_compile(shape_kind):
     """The step builders must lower+compile on a (4, 2) test mesh (the

@@ -1,0 +1,298 @@
+"""SyncStrategy API: legacy-mode parity (bit-identical trajectories), the
+deprecation shim, and the beyond-paper strategies (partial sharing,
+subsampled participation, adaptive-K) with their wire-byte accounting."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FedGAN, FedGANConfig, GANTask, strategies)
+from repro.core.strategies import (AdaptiveK, FedAvgSync, Hierarchical,
+                                   LocalOnly, PartialSharing, PerStepGradAvg,
+                                   SubsampledFedAvg, get_strategy,
+                                   strategy_from_mode)
+from repro.optim import SGD, constant, equal_timescale
+
+tmap = jax.tree_util.tree_map
+
+
+def quad_task():
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": {"theta": 0.1 * jax.random.normal(kg, (3,))},
+                "disc": {"w": 0.1 * jax.random.normal(kd, (3,))}}
+
+    def disc_loss(params, batch, rng):
+        xm = jnp.mean(batch["x"], axis=0)
+        g = jax.lax.stop_gradient(params["gen"]["theta"])
+        return (-jnp.dot(params["disc"]["w"], xm - g)
+                + 0.5 * jnp.sum(params["disc"]["w"] ** 2))
+
+    def gen_loss(params, batch, rng):
+        w = jax.lax.stop_gradient(params["disc"]["w"])
+        return jnp.dot(w, params["gen"]["theta"])
+
+    return GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss)
+
+
+def _round_inputs(rng, K, P, A, n=8, d=3):
+    """Non-iid per-agent batches so local runs diverge."""
+    x = (jax.random.normal(rng, (K, P, A, n, d))
+         + jnp.arange(P * A, dtype=jnp.float32).reshape(P, A)[None, :, :, None, None])
+    seeds = jax.random.randint(jax.random.fold_in(rng, 7), (K, P, A), 0,
+                               2 ** 31 - 1).astype(jnp.uint32)
+    return {"x": x}, seeds
+
+
+def _fed(strategy=None, K=4, grid=(2, 2), **cfg_kw):
+    return FedGAN(quad_task(),
+                  FedGANConfig(agent_grid=grid, sync_interval=K,
+                               strategy=strategy, **cfg_kw),
+                  opt_g=SGD(), opt_d=SGD(),
+                  scales=equal_timescale(constant(0.05)))
+
+
+def _run_round(fed, rng=1, K=4, n_rounds=1):
+    P, A = fed.cfg.agent_grid
+    state = fed.init_state(jax.random.key(0))
+    round_fn = jax.jit(fed.round)
+    for r in range(n_rounds):
+        batches, seeds = _round_inputs(jax.random.key(rng + r), K, P, A)
+        state, metrics = round_fn(state, batches, seeds)
+    return state, metrics
+
+
+def _gen_synced(state, p0=(0, 0), p1=(-1, -1), atol=0.0):
+    th = state["params"]["gen"]["theta"]
+    return bool(jnp.allclose(th[p0], th[p1], atol=atol))
+
+
+# ---------------------------------------------------------------------------
+# parity: every legacy mode string == its strategy, bit for bit
+# ---------------------------------------------------------------------------
+
+LEGACY_PAIRS = [
+    ("fedgan", dict(mode="fedgan"), FedAvgSync()),
+    ("distributed", dict(mode="distributed"), PerStepGradAvg()),
+    ("local_only", dict(mode="local_only"), LocalOnly()),
+    ("hierarchical", dict(mode="hierarchical", intra_interval=2),
+     Hierarchical(intra_interval=2)),
+    ("fedgan_bf16", dict(mode="fedgan", sync_dtype=jnp.bfloat16),
+     FedAvgSync(sync_dtype=jnp.bfloat16)),
+    ("fedgan_opt", dict(mode="fedgan", average_opt_state=True),
+     FedAvgSync(average_opt_state=True)),
+]
+
+
+@pytest.mark.parametrize("name,legacy_kw,strategy",
+                         LEGACY_PAIRS, ids=[p[0] for p in LEGACY_PAIRS])
+def test_legacy_mode_parity_bit_identical(name, legacy_kw, strategy):
+    """Same seed, two rounds: the deprecated mode string and its strategy
+    must produce byte-identical training trajectories."""
+    outs = []
+    for kw in (legacy_kw, dict(strategy=strategy)):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            fed = _fed(**kw)
+            state, _ = _run_round(fed, n_rounds=2)
+            outs.append(state)
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                    jax.tree_util.tree_leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mode_shim_warns_and_resolves():
+    cfg = FedGANConfig(mode="hierarchical", sync_interval=4, intra_interval=2)
+    with pytest.warns(DeprecationWarning):
+        strat = cfg.resolve_strategy()
+    assert isinstance(strat, Hierarchical) and strat.intra_interval == 2
+    # the strategy path is warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        FedGANConfig(strategy=FedAvgSync()).resolve_strategy()
+        FedGANConfig().resolve_strategy()  # default is FedAvgSync, no warning
+
+
+def test_strategy_conflicts_with_legacy_fields():
+    """Mixing strategy= with the deprecated knobs must fail loudly, not
+    silently drop the knob."""
+    for kw in (dict(mode="fedgan"), dict(sync_dtype=jnp.bfloat16),
+               dict(intra_interval=2), dict(average_opt_state=True)):
+        with pytest.raises(ValueError, match="conflicts"):
+            FedGANConfig(strategy=FedAvgSync(), **kw).resolve_strategy()
+
+
+def test_registry_and_unknowns():
+    assert isinstance(get_strategy("ps_fedgan"), PartialSharing)
+    with pytest.raises(ValueError):
+        get_strategy("nonsense")
+    with pytest.raises(ValueError):
+        strategy_from_mode("nonsense")
+    with pytest.raises(ValueError):
+        FedGANConfig(mode="nonsense").validate()
+
+
+def test_strategy_validate_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        Hierarchical(intra_interval=3).validate(FedGANConfig(sync_interval=4))
+    with pytest.raises(ValueError):
+        Hierarchical().validate(FedGANConfig(sync_interval=4))
+    with pytest.raises(ValueError):
+        SubsampledFedAvg(fraction=0.0).validate(FedGANConfig())
+    with pytest.raises(ValueError):
+        AdaptiveK(sync_every=0).validate(FedGANConfig())
+    with pytest.raises(ValueError):
+        FedAvgSync(subtrees=("nonsense",)).validate(FedGANConfig())
+
+
+# ---------------------------------------------------------------------------
+# PartialSharing: what-to-sync selection
+# ---------------------------------------------------------------------------
+
+
+def test_partial_sharing_syncs_gen_only():
+    fed = _fed(PartialSharing())
+    state, _ = _run_round(fed)
+    th = state["params"]["gen"]["theta"]
+    w = state["params"]["disc"]["w"]
+    assert bool(jnp.allclose(th[0, 0], th[-1, -1], atol=1e-6))
+    assert not bool(jnp.allclose(w[0, 0], w[-1, -1], atol=1e-6))
+
+
+def test_partial_sharing_bytes_half_of_full():
+    """quad_task has equal-size G and D -> gen-only sync is exactly half."""
+    fed = _fed(FedAvgSync())
+    state = fed.init_state(jax.random.key(0))
+    params = fed.agent_params(state)
+    full = FedAvgSync().bytes_per_round(fed.cfg, params)
+    partial = PartialSharing().bytes_per_round(fed.cfg, params)
+    assert partial * 2 == full
+    acct = fed.comm_bytes_per_round(state)
+    assert acct["strategy_bytes_per_round"] == full
+    assert acct["per_agent_per_round"]["fedgan"] == full
+
+
+# ---------------------------------------------------------------------------
+# SubsampledFedAvg: participation mask folded into the weights
+# ---------------------------------------------------------------------------
+
+
+def test_subsampled_participants_average_others_keep_local():
+    K, grid = 4, (1, 4)
+    strat = SubsampledFedAvg(fraction=0.5)
+    fed_sub = _fed(strat, K=K, grid=grid)
+    fed_loc = _fed(LocalOnly(), K=K, grid=grid)
+    sub, _ = _run_round(fed_sub, K=K)
+    loc, _ = _run_round(fed_loc, K=K)
+
+    mask = np.asarray(strat.participation_mask(fed_sub, {"step": jnp.int32(K)}))
+    assert mask.sum() == 2  # ceil(0.5 * 4)
+
+    # expected: weighted average of the PRE-sync (local-only) params over
+    # the participants, applied to participants only
+    w = np.asarray(fed_sub._w()) * mask
+    w = w / w.sum()
+    pre = np.asarray(loc["params"]["gen"]["theta"])
+    avg = np.einsum("pa,pa...->...", w, pre)
+    post = np.asarray(sub["params"]["gen"]["theta"])
+    for p in range(mask.shape[0]):
+        for a in range(mask.shape[1]):
+            want = avg if mask[p, a] else pre[p, a]
+            np.testing.assert_allclose(post[p, a], want, rtol=1e-6, atol=1e-7)
+
+
+def test_subsampled_bytes_scale_with_participation():
+    fed = _fed(FedAvgSync(), grid=(1, 4))
+    params = fed.agent_params(fed.init_state(jax.random.key(0)))
+    full = FedAvgSync().bytes_per_round(fed.cfg, params)
+    half = SubsampledFedAvg(fraction=0.5).bytes_per_round(fed.cfg, params)
+    assert half == full // 2
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveK: warmup-K schedule across rounds
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_k_syncs_on_schedule():
+    K, grid = 2, (1, 4)
+    fed = _fed(AdaptiveK(warmup_rounds=1, sync_every=2), K=K, grid=grid)
+    state = fed.init_state(jax.random.key(0))
+    round_fn = jax.jit(fed.round)
+    synced = []
+    for r in range(4):
+        batches, seeds = _round_inputs(jax.random.key(10 + r), K, *grid)
+        state, _ = round_fn(state, batches, seeds)
+        synced.append(_gen_synced(state, (0, 0), (0, -1), atol=1e-7))
+    # r0 warmup sync; r1 skipped; r2 sync; r3 skipped
+    assert synced == [True, False, True, False]
+
+
+def test_adaptive_k_bytes_amortised():
+    fed = _fed(FedAvgSync())
+    params = fed.agent_params(fed.init_state(jax.random.key(0)))
+    full = FedAvgSync().bytes_per_round(fed.cfg, params)
+    assert AdaptiveK(sync_every=2).bytes_per_round(fed.cfg, params) == full // 2
+
+
+# ---------------------------------------------------------------------------
+# accounting coherence across strategies
+# ---------------------------------------------------------------------------
+
+
+def test_bytes_accounting_relations():
+    K = 4
+    fed = _fed(FedAvgSync(), K=K)
+    cfg = fed.cfg
+    params = fed.agent_params(fed.init_state(jax.random.key(0)))
+    full = FedAvgSync().bytes_per_round(cfg, params)
+    assert PerStepGradAvg().bytes_per_round(cfg, params) == full * K
+    assert LocalOnly().bytes_per_round(cfg, params) == 0
+    assert FedAvgSync(sync_dtype=jnp.bfloat16).bytes_per_round(cfg, params) \
+        == full // 2  # f32 master, bf16 wire
+    n_segs = K // 2
+    assert Hierarchical(intra_interval=2).bytes_per_round(cfg, params) \
+        == full * (1 + n_segs)
+    # the intra-pod tier always moves the whole params tree at storage
+    # dtype — compression applies only to the cross-pod round sync
+    assert Hierarchical(intra_interval=2, sync_dtype=jnp.bfloat16) \
+        .bytes_per_round(cfg, params) == full // 2 + n_segs * full
+    # opt-state averaging moves the Adam moments too (SGD state is empty,
+    # so build the count from the tree directly)
+    opt = fed.agent_opt_state(fed.init_state(jax.random.key(0)))
+    from repro.dist import collectives
+    extra = collectives.sync_bytes(opt["opt_g"]) + collectives.sync_bytes(opt["opt_d"])
+    assert FedAvgSync(average_opt_state=True).bytes_per_round(cfg, params, opt=opt) \
+        == full + 2 * extra
+
+
+def test_opt_state_sync_preserves_adam_count():
+    """average_opt_state must not average integer leaves: the Adam step
+    count would truncate to zero under float weights, resetting bias
+    correction every round."""
+    from repro.optim import Adam
+    fed = FedGAN(quad_task(),
+                 FedGANConfig(agent_grid=(1, 4), sync_interval=4,
+                              strategy=FedAvgSync(average_opt_state=True)),
+                 opt_g=Adam(), opt_d=Adam(),
+                 scales=equal_timescale(constant(0.05)))
+    state, _ = _run_round(fed, K=4)
+    assert int(state["opt_g"]["count"][0, 0]) == 4
+    assert int(state["opt_d"]["count"][0, 3]) == 4
+    # the float moments DID sync
+    mu = state["opt_g"]["mu"]["theta"]
+    np.testing.assert_allclose(np.asarray(mu[0, 0]), np.asarray(mu[0, 3]),
+                               rtol=1e-6)
+
+
+def test_round_metrics_shape_unchanged_by_strategy():
+    for strat in (FedAvgSync(), PerStepGradAvg(), LocalOnly(),
+                  Hierarchical(intra_interval=2), PartialSharing(),
+                  SubsampledFedAvg(fraction=0.5),
+                  AdaptiveK(warmup_rounds=1, sync_every=2)):
+        fed = _fed(strat)
+        _, metrics = _run_round(fed)
+        assert metrics["d_loss"].shape == (4,)
+        assert np.isfinite(np.asarray(metrics["d_loss"])).all(), strat.name
