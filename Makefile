@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench bench-dryrun quickstart strategies-parity
+.PHONY: test test-fast lint bench bench-dryrun bench-serve docs-check \
+        quickstart serve-example strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -16,7 +17,11 @@ test-fast:
 # the public entry points import (catches syntax + import drift cheaply).
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels"
+	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint"
+
+# Execute every runnable snippet in docs/*.md (the docs-drift gate).
+docs-check:
+	$(PY) -m pytest -q tests/test_docs_snippets.py
 
 # Paper-figure benchmarks at reduced budgets (CSV to stdout).
 bench:
@@ -28,8 +33,16 @@ SHAPE ?= train_4k
 bench-dryrun:
 	$(PY) -m repro.launch.dryrun --arch $(ARCH) --shape $(SHAPE)
 
+# Serving-path benchmark with machine-readable BENCH_serve.json artifact.
+bench-serve:
+	$(PY) benchmarks/run.py --only serve --fast --json
+
 quickstart:
 	$(PY) examples/quickstart.py --K 20
+
+# Continuous-batching serving example (smoke-size arch, CPU-friendly).
+serve-example:
+	$(PY) examples/serve_generator.py --arch gemma3-4b --requests 5 --gen 8
 
 # SyncStrategy parity (legacy mode strings vs strategies, bit-identical)
 # + launcher strategy plumbing.

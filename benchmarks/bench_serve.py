@@ -1,0 +1,63 @@
+"""Serving-path benchmark: decode tokens/sec and tick-latency percentiles
+as a function of batch occupancy.
+
+Continuous batching trades per-request latency for throughput: every extra
+occupied slot rides the same weight reads, so tokens/sec should grow
+near-linearly with occupancy while the per-tick latency stays roughly flat
+(until the arithmetic saturates).  This bench measures exactly that curve
+on the smoke-size arch — the shape of the curve is the portable signal on
+CPU; absolute numbers come from the same harness on TPU.
+
+Rows: ``serve_occ<k>`` with us_per_call = p50 decode-tick latency; the
+structured fields (tokens_per_sec, p50/p99 ms, occupancy) land in
+``BENCH_serve.json`` via ``run.py --json``.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.serve import ServeEngine
+
+
+def bench_occupancy(arch: str = "gemma3-4b", *, max_batch: int = 4,
+                    prompt_len: int = 16, gen: int = 32, ring: bool = False):
+    cfg = get_config(arch).smoke()
+    rng = jax.random.key(0)
+
+    occs = sorted({1, max(max_batch // 2, 1), max_batch})
+    for n_req in occs:
+        eng = ServeEngine(cfg, max_batch=max_batch,
+                          max_seq=prompt_len + gen, ring=ring)
+        # warmup request triggers the prefill + decode compiles (the
+        # executable cache is shared across engines of the same backbone,
+        # so later iterations start warm)
+        eng.submit(jax.random.randint(rng, (prompt_len,), 0, cfg.vocab_size),
+                   max_new_tokens=2)
+        eng.run()
+        eng.stats = type(eng.stats)()
+
+        for i in range(n_req):
+            prompt = jax.random.randint(jax.random.fold_in(rng, i),
+                                        (prompt_len,), 0, cfg.vocab_size)
+            eng.submit(prompt, max_new_tokens=gen)
+        eng.run()
+
+        s = eng.stats
+        emit(f"serve_occ{n_req}", s.tick_ms(50) * 1e3,
+             f"tok/s={s.tokens_per_sec():.0f},p99_ms={s.tick_ms(99):.1f}",
+             tokens_per_sec=round(s.tokens_per_sec(), 1),
+             p50_ms=round(s.tick_ms(50), 2),
+             p99_ms=round(s.tick_ms(99), 2),
+             occupancy=round(s.mean_occupancy(max_batch), 3),
+             decode_tokens=s.decode_tokens,
+             arch=cfg.name)
+
+
+def main(fast: bool = False):
+    bench_occupancy(gen=16 if fast else 32)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,12 +2,18 @@
 
 Every bench prints ``name,us_per_call,derived`` CSV rows; ``derived`` carries
 the paper-comparable quantity (FID-analog, mode coverage, comm bytes, ...).
+``emit`` also records each row in a process-local buffer so ``run.py --json``
+can persist machine-readable ``BENCH_<suite>.json`` artifacts; pass extra
+keyword fields for structured quantities the CSV string would mangle
+(``emit("serve_occ4", us, "...", tokens_per_sec=123.4)``).
 """
 from __future__ import annotations
 
 import time
 
 import jax
+
+_RECORDS: list[dict] = []
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):
@@ -23,5 +29,14 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     return r, (time.perf_counter() - t0) / iters * 1e6
 
 
-def emit(name: str, us_per_call: float, derived):
+def emit(name: str, us_per_call: float, derived, **extra):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                     "derived": str(derived), **extra})
+
+
+def drain_records() -> list[dict]:
+    """Return and clear the rows emitted since the last drain."""
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out

@@ -11,21 +11,36 @@
 #   Lem1/2 (drift vs bounds)             -> bench_lemmas
 #   (g)    (roofline from dry-run)       -> bench_roofline
 #   kernels (Pallas vs oracle)           -> bench_kernels
+#   serving (tok/s + tick latency vs occupancy) -> bench_serve
+#
+# ``--json`` additionally writes one machine-readable BENCH_<suite>.json per
+# executed suite (into --json-dir), so the bench trajectory is comparable
+# across commits instead of living only in scrollback.
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; the root must be importable for the `benchmarks.*` modules.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated bench subset")
     ap.add_argument("--fast", action="store_true", help="reduced step budgets")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<suite>.json artifacts")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the --json artifacts")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_comm, bench_images, bench_kernels,
-                            bench_lemmas, bench_roofline, bench_timeseries,
-                            bench_toy)
+                            bench_lemmas, bench_roofline, bench_serve,
+                            bench_timeseries, bench_toy, common)
 
     fast = args.fast
     suites = {
@@ -40,6 +55,7 @@ def main() -> None:
         "lemmas": bench_lemmas.main,
         "roofline": bench_roofline.main,
         "kernels": bench_kernels.main,
+        "serve": lambda: bench_serve.main(fast=fast),
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")
@@ -47,13 +63,25 @@ def main() -> None:
         if only and name not in only:
             continue
         t0 = time.time()
+        common.drain_records()
+        error = ""
         try:
             fn()
         except Exception:
-            print(f"{name}_SUITE_ERROR,0.0,{traceback.format_exc(limit=1).splitlines()[-1]}",
-                  flush=True)
+            error = traceback.format_exc(limit=1).splitlines()[-1]
+            print(f"{name}_SUITE_ERROR,0.0,{error}", flush=True)
         print(f"# suite {name} finished in {time.time()-t0:.1f}s", file=sys.stderr,
               flush=True)
+        if args.json:
+            artifact = {"suite": name, "fast": fast,
+                        "seconds": round(time.time() - t0, 1),
+                        "records": common.drain_records()}
+            if error:
+                artifact["error"] = error
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(artifact, f, indent=1)
+            print(f"# wrote {path}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -1,88 +1,85 @@
-"""End-to-end serving driver: batched prefill + decode of a backbone.
+"""Serve a generator with continuous batching — thin CLI over repro.serve.
 
-Loads a reduced assigned architecture (any of the 10 via --arch), prefill's
-a batch of prompts, then decodes new tokens step by step — the same
-prefill/serve_step pair the 32k/500k dry-run shapes lower.  Sliding-window
-archs can serve with O(window) ring caches (--ring).
+Submits ``--requests`` generation requests of staggered prompt lengths to a
+:class:`repro.serve.ServeEngine` (any of the 10 assigned archs via --arch,
+reduced smoke size) and drains them: requests are admitted into free batch
+slots as earlier ones finish, every slot decodes at its own position, and
+sliding-window archs can serve with O(window) ring caches (--ring).
 
 Run:  PYTHONPATH=src python examples/serve_generator.py --arch gemma3-4b \
-          --batch 4 --prompt-len 32 --gen 16 --ring
+          --requests 6 --batch 4 --prompt-len 32 --gen 16 --ring
+
+Hot-reload a training run live (two terminals, docs/serving.md):
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b \
+      --steps 40 --ckpt-dir /tmp/fedgan-ck          # terminal 1
+  PYTHONPATH=src python examples/serve_generator.py --arch gemma3-4b \
+      --ckpt-dir /tmp/fedgan-ck                     # terminal 2
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.models.transformer import Backbone
+from repro.serve import ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=4, help="engine batch slots")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--ring", action="store_true")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="decode-cache capacity (default prompt+gen)")
+    ap.add_argument("--ring", action="store_true",
+                    help="O(window) ring caches on sliding-window layers")
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--ckpt-dir", default="",
+                    help="hot-reload generator params from this train run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
-    bb = Backbone(cfg, ring_cache=args.ring)
-    params = bb.init(jax.random.key(0))
+    max_seq = args.max_seq or args.prompt_len + args.gen
+    eng = ServeEngine(cfg, max_batch=args.batch, max_seq=max_seq,
+                      ring=args.ring, ckpt_dir=args.ckpt_dir)
+
     rng = jax.random.key(1)
-    B, T, G = args.batch, args.prompt_len, args.gen
-    max_seq = T + G
-    prompts = jax.random.randint(rng, (B, T), 0, cfg.vocab_size)
-    frames = None
-    if cfg.family == "audio":
-        frames = 0.1 * jax.random.normal(jax.random.fold_in(rng, 2),
-                                         (B, cfg.encoder_seq, cfg.d_model))
+    rids = []
+    for i in range(args.requests):
+        # staggered lengths exercise bucketing + mid-stream admission
+        T = max(4, args.prompt_len - 3 * (i % args.batch))
+        prompt = jax.random.randint(jax.random.fold_in(rng, i), (T,), 0,
+                                    cfg.vocab_size)
+        frames = None
+        if cfg.family == "audio":
+            frames = 0.1 * jax.random.normal(
+                jax.random.fold_in(rng, 1000 + i),
+                (cfg.encoder_seq, cfg.d_model))
+        rids.append(eng.submit(prompt, max_new_tokens=args.gen,
+                               temperature=args.temperature, frames=frames))
 
-    # ---- prefill ----
     t0 = time.perf_counter()
-    prefill = jax.jit(lambda p, t: bb.prefill(p, t, encoder_frames=frames,
-                                              max_seq=max_seq))
-    out = prefill(params, prompts)
-    jax.block_until_ready(out["logits"])
-    t_prefill = time.perf_counter() - t0
-    cache = out["cache"]
-    if cfg.family == "audio":
-        mem = out["memory"]
-        blk = bb._block(cross=True)
-        cache["cross"] = jax.vmap(
-            lambda bp: blk.attn.build_memory_cache(bp["xattn"], mem))(params["blocks"])
+    done = eng.run()
+    wall = time.perf_counter() - t0
 
-    # ---- decode loop (greedy/temperature sampling over the REAL vocab; the
-    # head is padded to a multiple of 256 for sharding) ----
-    decode = jax.jit(bb.decode)
-    logits = out["logits"][:, -1]
-
-    def sample(rng, logits):
-        logits = logits[:, :cfg.vocab_size]  # mask vocab padding
-        if args.temperature == 0:
-            return jnp.argmax(logits, -1)
-        return jax.random.categorical(rng, logits / args.temperature, axis=-1)
-
-    tokens = []
-    t0 = time.perf_counter()
-    tok = sample(jax.random.fold_in(rng, 100), logits)
-    for i in range(G):
-        tokens.append(tok)
-        logits1, cache = decode(params, tok[:, None], cache, jnp.int32(T + i))
-        tok = sample(jax.random.fold_in(rng, 101 + i), logits1[:, 0])
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = jnp.stack(tokens, axis=1)
-    print(f"arch={cfg.name} (smoke) ring_cache={args.ring}")
-    print(f"prefill: {B}x{T} tokens in {t_prefill*1e3:.1f} ms "
-          f"({B*T/t_prefill:.0f} tok/s incl. compile)")
-    print(f"decode:  {G} steps x batch {B} in {t_decode*1e3:.1f} ms "
-          f"({B*G/t_decode:.0f} tok/s)")
-    print(f"generated ids[0]: {gen[0].tolist()}")
-    assert gen.shape == (B, G) and int(gen.max()) < cfg.vocab_size
+    s = eng.stats
+    for rid in rids:
+        req = done[rid]
+        assert len(req.generated) == args.gen
+        assert max(req.generated) < cfg.vocab_size
+        print(f"req {rid}: prompt {req.prompt_len:3d} -> {req.generated[:8]}"
+              f"{' ...' if args.gen > 8 else ''}")
+    print(f"arch={cfg.name} (smoke) ring={args.ring} slots={args.batch} "
+          f"buckets={sorted(s.prefill_buckets)}")
+    print(f"{s.ticks} ticks, {s.decode_tokens} decode tokens in {wall:.1f}s "
+          f"wall ({s.tokens_per_sec():.0f} tok/s decode, "
+          f"occupancy {s.mean_occupancy(args.batch):.0%})")
+    print(f"tick latency p50={s.tick_ms(50):.1f}ms p99={s.tick_ms(99):.1f}ms; "
+          f"reloads={s.reloads}"
+          + (f" (step {eng.loaded_step})" if eng.loaded_step is not None else ""))
     print("serve OK ✓")
 
 

@@ -1,3 +1,5 @@
-from repro.checkpoint.store import list_checkpoints, restore_checkpoint, save_checkpoint
+from repro.checkpoint.store import (list_checkpoints, read_latest_step,
+                                    restore_checkpoint, save_checkpoint)
 
-__all__ = ["list_checkpoints", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["list_checkpoints", "read_latest_step", "restore_checkpoint",
+           "save_checkpoint"]

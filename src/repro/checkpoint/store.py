@@ -4,6 +4,13 @@ Layout:  <dir>/step_<n>/arrays.npz + manifest.json, plus <dir>/LATEST.
 Works for FedGAN agent-stacked states (the (P, A) axis is just leading
 dims) and plain model params.  Restore rebuilds the exact pytree structure
 and dtypes.
+
+Write ordering is the contract hot-reload (repro.serve.reload) depends on:
+a step directory is fully written (arrays, then manifest) *before* LATEST
+is pointed at it, and LATEST itself is updated atomically (temp file +
+os.replace), so a concurrent reader either sees the previous complete
+checkpoint or the new complete one — never a torn pointer or a
+half-written step.
 """
 from __future__ import annotations
 
@@ -82,9 +89,39 @@ def save_checkpoint(directory: str, state: Any, *, step: int,
     }
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    with open(os.path.join(directory, "LATEST"), "w") as f:
-        f.write(os.path.basename(path))
+    _write_latest(directory, os.path.basename(path))
     return path
+
+
+def _write_latest(directory: str, name: str) -> None:
+    """Atomic LATEST update: a plain ``open(..., "w")`` truncates first, so a
+    concurrent reader could observe an empty or partial pointer.  Writing a
+    temp file and ``os.replace``-ing it makes the swap a single atomic rename
+    on POSIX filesystems."""
+    tmp = os.path.join(directory, f".LATEST.tmp.{os.getpid()}")
+    with open(tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(directory, "LATEST"))
+
+
+def read_latest_step(directory: str) -> int | None:
+    """Step number LATEST points at, or None when no checkpoint exists yet.
+
+    This is the cheap poll hot-reload uses between serve ticks: one small
+    file read, no array IO."""
+    try:
+        with open(os.path.join(directory, "LATEST")) as f:
+            name = f.read().strip()
+    except FileNotFoundError:
+        return None
+    if not name.startswith("step_"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
 
 
 def restore_checkpoint(directory: str, *, step: int | None = None) -> tuple[Any, dict]:

@@ -29,6 +29,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_serving_mesh(*, model_parallel: int = 1, devices=None):
+    """Serving mesh shaped from the devices actually present: ("data",
+    "model") with ``model_parallel`` chips of tensor parallelism per replica
+    and the rest as batch parallelism.  The 1-device CPU case degenerates to
+    a (1, 1) mesh on which every constraint is a no-op, so the
+    ``repro.serve`` engine runs the identical code path from laptop to pod.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs)
+    if model_parallel < 1 or n % model_parallel:
+        raise ValueError(f"model_parallel {model_parallel} must divide the "
+                         f"{n} available devices")
+    return _make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (requires the XLA host-device
     flag to have been set before jax initialised)."""

@@ -210,8 +210,13 @@ def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
         log_every=max((steps // K) // 10, 1), ckpt_dir=ckpt_dir).run()
 
 
-def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None):
-    """Federated adversarial training of a reduced assigned backbone."""
+def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None,
+                   ckpt_dir: str = ""):
+    """Federated adversarial training of a reduced assigned backbone.
+
+    With ``ckpt_dir`` the run checkpoints its FedGAN state, which a
+    ``repro.serve`` engine in another process can hot-reload live — the
+    two-terminal walkthrough in docs/serving.md."""
     from repro.configs import get_config
     from repro.launch.steps import make_lm_gan_task
     cfg = get_config(arch).smoke()
@@ -231,7 +236,7 @@ def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None):
         task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
         batch_size=8, scales=equal_timescale(constant(1e-3)),
         opt_d=Adam(), opt_g=Adam(), strategy=strategy, seed=seed,
-        log_every=1).run()
+        log_every=1, ckpt_dir=ckpt_dir).run()
 
 
 # ---------------------------------------------------------------------------
@@ -313,7 +318,8 @@ def main():
                        seed=args.seed, strategy=strategy, ckpt_dir=args.ckpt_dir)
     elif args.arch:
         run_arch_smoke(args.arch, steps=args.steps or 20, K=args.K or 5,
-                       seed=args.seed, strategy=strategy)
+                       seed=args.seed, strategy=strategy,
+                       ckpt_dir=args.ckpt_dir)
     else:
         ap.error("need --experiment or --arch")
 

@@ -18,6 +18,18 @@ from repro.models.config import ArchConfig
 NEG_INF = -2.0 ** 30  # large-but-finite mask value (NaN-safe under softmax)
 
 
+def decode_positions(index, batch: int) -> jax.Array:
+    """Normalize a decode index — scalar () or per-row (B,) — to (B,) int32.
+
+    The scalar form is the lockstep case (every row writes the same cache
+    position); the vector form is what continuous batching needs, where each
+    batch slot sits at its own sequence position."""
+    idx = jnp.asarray(index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (batch,))
+    return idx
+
+
 # ---------------------------------------------------------------------------
 # RoPE
 # ---------------------------------------------------------------------------
@@ -166,12 +178,13 @@ class Attention(nn.Module):
 
     # -- single-token decode against a KV cache -----------------------------------
     def decode(self, params, x, cache, index, *, window=None, memory=None):
-        """x: (B, 1, d); cache: dict(k=(B,S,nkv,hd), v=...); index: scalar int —
-        the position being written.  Returns (y, new_cache)."""
+        """x: (B, 1, d); cache: dict(k=(B,S,nkv,hd), v=...); index: the
+        position being written — a scalar int (lockstep batch) or a (B,)
+        vector of per-row positions (continuous batching).  Returns
+        (y, new_cache)."""
         c = self.cfg
         nh, nkv, hd = self.dims
         B = x.shape[0]
-        pos = jnp.full((B, 1), index, dtype=jnp.int32)
 
         if memory is not None:
             S = memory.shape[1]
@@ -182,13 +195,24 @@ class Attention(nn.Module):
             y = (y.reshape(B, 1, nh * hd) @ params["wo"]["w"].astype(c.dtype))
             return shard(y, *batch_spec(None, None)), cache
 
-        q, k1, v1 = self._qkv(params, x, pos)
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), index, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), index, axis=1)
-        kpos = jnp.arange(k.shape[1])
-        valid = kpos <= index
-        if window is not None:
-            valid &= kpos > index - window
+        idx = decode_positions(index, B)
+        q, k1, v1 = self._qkv(params, x, idx[:, None])
+        kpos = jnp.arange(cache["k"].shape[1])
+        if jnp.ndim(index) == 0:
+            # lockstep fast path: one dynamic_update_slice, shared (S,) mask
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), index, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), index, axis=1)
+            valid = kpos <= index
+            if window is not None:
+                valid &= kpos > index - window
+        else:
+            # per-row scatter: row b writes its own position idx[b]
+            hit = kpos[None, :] == idx[:, None]                    # (B, S)
+            k = jnp.where(hit[..., None, None], k1.astype(cache["k"].dtype), cache["k"])
+            v = jnp.where(hit[..., None, None], v1.astype(cache["v"].dtype), cache["v"])
+            valid = kpos[None, :] <= idx[:, None]
+            if window is not None:
+                valid &= kpos[None, :] > idx[:, None] - window
         y = self._decode_attend(q, k, v, valid)
         y = y.reshape(B, 1, nh * hd) @ params["wo"]["w"].astype(c.dtype)
         return shard(y, *batch_spec(None, None)), {"k": k, "v": v}
@@ -216,20 +240,20 @@ class Attention(nn.Module):
     def decode_ring(self, params, x, cache, index):
         """Sliding-window decode on a ring-buffer cache of width W — the
         cache read is O(W), not O(S): the structural win of windowed layers
-        for long-context serving.  cache: {k,v: (B,W,nkv,hd), pos: (W,) i32,
-        positions initialised to -1}."""
+        for long-context serving.  cache: {k,v: (B,W,nkv,hd), pos: (B,W) i32,
+        positions initialised to -1}.  ``index`` may be scalar (lockstep) or
+        (B,) per-row positions (continuous batching)."""
         c = self.cfg
         nh, nkv, hd = self.dims
         B = x.shape[0]
         W = cache["k"].shape[1]
-        posv = jnp.full((B, 1), index, dtype=jnp.int32)
-        q, k1, v1 = self._qkv(params, x, posv)
-        slot = jnp.mod(index, W)
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), slot, axis=1)
-        pos = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], jnp.full((1,), index, jnp.int32), slot, axis=0)
-        valid = (pos >= 0) & (pos <= index)
+        idx = decode_positions(index, B)
+        q, k1, v1 = self._qkv(params, x, idx[:, None])
+        hit = jnp.arange(W)[None, :] == jnp.mod(idx, W)[:, None]   # (B, W)
+        k = jnp.where(hit[..., None, None], k1.astype(cache["k"].dtype), cache["k"])
+        v = jnp.where(hit[..., None, None], v1.astype(cache["v"].dtype), cache["v"])
+        pos = jnp.where(hit, idx[:, None], cache["pos"])
+        valid = (pos >= 0) & (pos <= idx[:, None])                 # (B, W)
         y = self._decode_attend(q, k, v, valid)
         y = y.reshape(B, 1, nh * hd) @ params["wo"]["w"].astype(c.dtype)
         return shard(y, *batch_spec(None, None)), {"k": k, "v": v, "pos": pos}
@@ -241,7 +265,9 @@ class Attention(nn.Module):
         qh = q.reshape(B, nkv, group, hd)
         logits = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(q.dtype)).astype(jnp.float32)
         logits *= 1.0 / math.sqrt(hd)
-        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        # valid: (S,) shared mask, or (B, S) per-row (continuous batching)
+        mask = valid[None, None, None] if valid.ndim == 1 else valid[:, None, None, :]
+        logits = jnp.where(mask, logits, NEG_INF)
         probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
         y = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(q.dtype))
         return y.reshape(B, 1, nh, hd)
@@ -255,7 +281,7 @@ class Attention(nn.Module):
             "v": jnp.zeros((batch, seq, nkv, hd), dt),
         }
         if ring:
-            cache["pos"] = jnp.full((seq,), -1, jnp.int32)
+            cache["pos"] = jnp.full((batch, seq), -1, jnp.int32)
         return cache
 
 

@@ -275,11 +275,19 @@ class Backbone(nn.Module):
         if logits_mode == "none":
             return h, None
         hh = h[:, -1:] if logits_mode == "last" else h
+        return h, self.project_logits(params, hh)
+
+    def project_logits(self, params, h):
+        """Head matmul on already-final-normed hidden states (B, T, d) ->
+        (B, T, padded_vocab) f32.  Public so the serve engine can gather the
+        last *real* token of a right-padded prefill before projecting,
+        instead of paying full-sequence logits."""
+        c = self.cfg
         if c.tie_embeddings:
-            logits = hh @ params["embed"]["table"].T.astype(c.dtype)
+            logits = h @ params["embed"]["table"].T.astype(c.dtype)
         else:
-            logits = hh @ params["lm_head"]["w"].astype(c.dtype)
-        return h, shard(logits.astype(jnp.float32), *batch_spec(None, "model"))
+            logits = h @ params["lm_head"]["w"].astype(c.dtype)
+        return shard(logits.astype(jnp.float32), *batch_spec(None, "model"))
 
     # ---- full-sequence forward ----
     def apply(self, params, tokens=None, *, embeddings=None, encoder_frames=None,
@@ -472,6 +480,22 @@ class Backbone(nn.Module):
             out["cache"] = _pad_attn_cache(out["cache"], max_seq - T)
         return out
 
+    # ---- cross-attention cache (audio) ----
+    def build_cross_cache(self, params, memory):
+        """Per-layer cross-attention K/V from encoder output (B, S_enc, d).
+
+        Returns the {"k", "v"} tree stacked over decoder layers, shaped
+        (L, B, S_enc, n_kv, head_dim) — exactly the ``cache["cross"]`` layout
+        that ``init_cache``/``prefill`` use.  This is the public replacement
+        for the old ``bb._block(cross=True)`` reach-in."""
+        if self.cfg.family != "audio":
+            raise ValueError("build_cross_cache: only the audio (enc-dec) "
+                             f"family has cross-attention, got {self.cfg.family!r}")
+        blk = self._block(cross=True)
+        return jax.vmap(
+            lambda bp: blk.attn.build_memory_cache(bp["xattn"], memory)
+        )(params["blocks"])
+
     # ---- decode cache ----
     def init_cache(self, batch: int, seq: int):
         c = self.cfg
@@ -528,8 +552,10 @@ class Backbone(nn.Module):
 
     # ---- one-token decode ----
     def decode(self, params, token, cache, index):
-        """token: (B, 1) int32; index: scalar int32 position being generated.
-        Returns (logits (B,1,V), new_cache)."""
+        """token: (B, 1) int32; index: the position being generated — a
+        scalar int32 (lockstep batch) or a (B,) vector of per-row positions
+        (continuous batching, where every slot is mid-way through its own
+        request).  Returns (logits (B,1,V), new_cache)."""
         c = self.cfg
         h = self._embed(params, token)
         use_ring = self.ring_cache and c.sliding_window > 0

@@ -1,0 +1,20 @@
+"""repro.serve — continuous-batching generator serving.
+
+The repo's third pillar (dist → strategies → serve): the FedGAN end product
+is the synced generator, and this package is what actually serves it —
+a :class:`ServeEngine` with bounded compiled executables, a continuous
+:class:`Batcher`, formalized KV-cache layouts (:mod:`repro.serve.cache`)
+and hot-reload of training checkpoints (:mod:`repro.serve.reload`).
+Operator guide: docs/serving.md.
+"""
+from repro.serve.batcher import Batcher, Request
+from repro.serve.cache import (CacheLayout, insert_slot, make_buckets,
+                               plan_layout, prefill_bucket, ring_index_map)
+from repro.serve.engine import EngineStats, ServeEngine
+from repro.serve.reload import CheckpointWatcher, generator_from_state
+
+__all__ = [
+    "Batcher", "CacheLayout", "CheckpointWatcher", "EngineStats", "Request",
+    "ServeEngine", "generator_from_state", "insert_slot", "make_buckets",
+    "plan_layout", "prefill_bucket", "ring_index_map",
+]

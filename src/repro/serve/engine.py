@@ -1,0 +1,316 @@
+"""ServeEngine: continuous-batching generation over a ``Backbone``.
+
+One engine owns
+
+  * a fixed decode cache of ``max_batch`` slots x ``max_seq`` positions
+    (ring-width for windowed layers under ``ring=True``),
+  * compiled executables, keyed by (backbone, bucketed input shape): ONE
+    decode executable at (max_batch, 1), and one prefill executable per
+    prompt-length bucket — the executable cache is module-level, so two
+    engines over the same arch share compilations,
+  * a :class:`~repro.serve.batcher.Batcher` admitting queued requests into
+    free slots each tick and evicting finished ones,
+  * optionally a :class:`~repro.serve.reload.CheckpointWatcher` that swaps
+    in newer generator params between ticks (same shapes — no recompile).
+
+Every slot decodes at its *own* sequence position (``Backbone.decode``
+takes a (B,) index vector), which is what lets a new request start while
+its neighbours are mid-generation.  See docs/serving.md for the operator
+view: lifecycle, bucketing model, hot-reload semantics, capacity planning.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import functools
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.transformer import Backbone
+from repro.serve.batcher import Batcher, Request
+from repro.serve.cache import (insert_slot, make_buckets, plan_layout,
+                               prefill_bucket)
+from repro.serve.reload import CheckpointWatcher
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_exec(bb: Backbone):
+    # Donate the cache so XLA updates it in place instead of copying the
+    # dominant serving buffer every tick (the engine drops its reference on
+    # reassignment).  CPU lacks donation support and would warn every call.
+    donate = (2,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(bb.decode, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_exec(bb: Backbone):
+    """Bucketed prefill: forward the padded prompt, gather the hidden state
+    at the last REAL token (``last``), project only that row to logits."""
+
+    def fn(params, toks, last, frames=None):
+        out = bb.prefill(params, toks, encoder_frames=frames,
+                         logits_mode="none")
+        h = jax.lax.dynamic_index_in_dim(out["hidden"], last, axis=1,
+                                         keepdims=True)
+        return bb.project_logits(params, h), out["cache"]
+
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Operational counters a bench or operator dashboard reads.
+
+    Per-tick samples live in bounded deques (recent-window percentiles);
+    throughput/occupancy come from running aggregates, so a server ticking
+    indefinitely holds O(1) memory."""
+
+    WINDOW = 4096
+
+    ticks: int = 0
+    prefills: int = 0
+    reloads: int = 0
+    decode_tokens: int = 0
+    decode_ticks: int = 0
+    total_tick_seconds: float = 0.0
+    total_active: int = 0
+    prefill_buckets: set = dataclasses.field(default_factory=set)
+    tick_seconds: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=EngineStats.WINDOW))
+    tick_active: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=EngineStats.WINDOW))
+    prefill_seconds: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=EngineStats.WINDOW))
+
+    def record_decode(self, seconds: float, active: int) -> None:
+        self.decode_tokens += active
+        self.decode_ticks += 1
+        self.total_tick_seconds += seconds
+        self.total_active += active
+        self.tick_seconds.append(seconds)
+        self.tick_active.append(active)
+
+    def tick_ms(self, q: float) -> float:
+        """q-th percentile decode-tick latency in ms (q in [0, 100]), over
+        the last WINDOW ticks."""
+        if not self.tick_seconds:
+            return 0.0
+        xs = sorted(self.tick_seconds)
+        i = min(int(round(q / 100 * (len(xs) - 1))), len(xs) - 1)
+        return xs[i] * 1e3
+
+    def tokens_per_sec(self) -> float:
+        if self.total_tick_seconds <= 0:
+            return 0.0
+        return self.decode_tokens / self.total_tick_seconds
+
+    def mean_occupancy(self, max_batch: int) -> float:
+        if not self.decode_ticks:
+            return 0.0
+        return self.total_active / (self.decode_ticks * max_batch)
+
+
+class ServeEngine:
+    """Continuous-batching serving of one generator architecture."""
+
+    def __init__(self, cfg: ArchConfig, *, max_batch: int = 4,
+                 max_seq: int = 256, ring: bool = False,
+                 params=None, rng_seed: int = 0, min_bucket: int = 16,
+                 ckpt_dir: str = "", ckpt_extract=None, reload_every: int = 1,
+                 mesh=None):
+        self.cfg = cfg
+        self.bb = Backbone(cfg, ring_cache=ring)
+        self.layout = plan_layout(cfg, max_seq, ring=ring)
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self.buckets = make_buckets(min(min_bucket, max_seq), max_seq)
+        self.batcher = Batcher(max_batch)
+        self.mesh = mesh
+        self.stats = EngineStats()
+        self.reload_every = max(reload_every, 1)
+        self.loaded_step: Optional[int] = None
+        self._rng = np.random.default_rng(rng_seed)
+        self._tokens = np.zeros((max_batch,), np.int32)
+        self._indices = np.zeros((max_batch,), np.int32)
+
+        self.watcher = None
+        if ckpt_dir:
+            self.watcher = CheckpointWatcher(ckpt_dir, extract=ckpt_extract)
+
+        with self._on_mesh():
+            if params is None and self.watcher is not None:
+                got = self.watcher.poll()
+                if got is not None:
+                    params, self.loaded_step = got
+            if params is None:
+                params = self.bb.init(jax.random.key(rng_seed))
+            self.params = self._place_params(params)
+            self.cache = self._place_cache(self.bb.init_cache(max_batch, max_seq))
+        self._param_shapes = jax.tree_util.tree_map(jnp.shape, self.params)
+
+    # ---- sharded-serving plumbing -----------------------------------------
+    @contextlib.contextmanager
+    def _on_mesh(self):
+        if self.mesh is None:
+            yield
+        else:
+            with jax.set_mesh(self.mesh):
+                yield
+
+    def _place_params(self, params):
+        if self.mesh is None:
+            return params
+        from repro.dist.sharding import named_shardings, param_specs
+        specs = param_specs(params, self.mesh)
+        return jax.device_put(params, named_shardings(self.mesh, specs))
+
+    def _place_cache(self, cache):
+        if self.mesh is None:
+            return cache
+        from repro.dist.sharding import named_shardings
+        from repro.launch.steps import cache_specs
+        specs = cache_specs(cache, self.mesh, batch=self.max_batch)
+        return jax.device_put(cache, named_shardings(self.mesh, specs))
+
+    # ---- request intake ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, *, temperature: float = 0.0,
+               frames=None, stop_tokens=()) -> int:
+        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds the engine's max_seq {self.max_seq}")
+        if self.cfg.family == "audio" and frames is None:
+            raise ValueError("audio family requests need encoder frames")
+        req = Request(rid=-1, prompt=prompt, max_new_tokens=max_new_tokens,
+                      temperature=temperature, frames=frames,
+                      stop_tokens=frozenset(stop_tokens))
+        return self.batcher.submit(req)
+
+    # ---- hot reload --------------------------------------------------------
+    def maybe_reload(self) -> bool:
+        if self.watcher is None or self.stats.ticks % self.reload_every:
+            return False
+        got = self.watcher.poll()
+        if got is None:
+            return False
+        params, step = got
+        try:
+            same = (jax.tree_util.tree_map(jnp.shape, params)
+                    == self._param_shapes)
+        except ValueError:  # tree structures differ
+            same = False
+        if not same:
+            raise RuntimeError(
+                f"checkpoint step {step} params tree does not match the "
+                f"serving arch {self.cfg.name} — wrong --ckpt-dir or config?")
+        with self._on_mesh():
+            self.params = self._place_params(params)
+        self.loaded_step = step
+        self.stats.reloads += 1
+        return True
+
+    # ---- one tick ----------------------------------------------------------
+    def tick(self) -> list[Request]:
+        """Evict finished requests, admit queued ones (prefill), run one
+        decode step for all active slots.  Returns the evicted requests."""
+        self.maybe_reload()
+        finished = self.batcher.evict()
+        self.stats.ticks += 1
+        with self._on_mesh():
+            for slot, req in self.batcher.admit():
+                self._prefill_into(slot, req)
+            active = self.batcher.active()
+            if active:
+                self._decode_tick(active)
+        return finished
+
+    def run(self, *, max_ticks: int = 1_000_000) -> dict[int, Request]:
+        """Tick until every submitted request is finished; returns
+        {rid: request} for all evicted requests."""
+        done: dict[int, Request] = {}
+        ticks = 0
+        while self.batcher.has_work:
+            if ticks >= max_ticks:
+                raise RuntimeError(f"not drained after {max_ticks} ticks")
+            ticks += 1
+            for req in self.tick():
+                done[req.rid] = req
+        return done
+
+    # ---- internals ---------------------------------------------------------
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        """Bucketed (attention families) or exact-prefix (recurrent-state
+        families) prefill, written into the request's batch slot.  Any prompt
+        tokens beyond the prefix land in ``req.pending`` and are fed through
+        the shared decode step — chunked prefill, which threads SSM state
+        exactly instead of corrupting it with pad tokens."""
+        t0 = time.perf_counter()
+        T = req.prompt_len
+        Tb = prefill_bucket(self.cfg, T, self.buckets)
+        req.pending = list(req.prompt[Tb:])  # empty for bucketed families
+        if Tb == 0:
+            # prompt shorter than one SSD chunk: reset the slot to fresh
+            # state and feed the whole prompt through decode
+            fresh = self.bb.init_cache(1, self.max_seq)
+            self.cache = insert_slot(self.cache, fresh, slot, prompt_len=0)
+            req.position = 0
+            self._tokens[slot] = req.pending.pop(0)
+            self._indices[slot] = 0
+        else:
+            toks = np.zeros((1, Tb), np.int32)
+            n = min(T, Tb)
+            toks[0, :n] = req.prompt[:n]
+            args = [self.params, jnp.asarray(toks), jnp.int32(n - 1)]
+            if req.frames is not None:
+                args.append(jnp.asarray(req.frames)[None])
+            logits, req_cache = _prefill_exec(self.bb)(*args)
+            self.cache = insert_slot(self.cache, req_cache, slot, prompt_len=n)
+            req.position = n
+            self._indices[slot] = n
+            if req.pending:
+                self._tokens[slot] = req.pending.pop(0)
+            else:
+                tok = self._sample(logits[0, 0], req)
+                req.generated.append(tok)
+                self._tokens[slot] = tok
+        self.stats.prefills += 1
+        self.stats.prefill_buckets.add(Tb)
+        self.stats.prefill_seconds.append(time.perf_counter() - t0)
+
+    def _decode_tick(self, active) -> None:
+        t0 = time.perf_counter()
+        logits, self.cache = _decode_exec(self.bb)(
+            self.params, jnp.asarray(self._tokens)[:, None], self.cache,
+            jnp.asarray(self._indices))
+        logits = jax.device_get(logits)
+        for slot, req in active:
+            req.position += 1
+            self._indices[slot] += 1
+            if req.pending:
+                # still consuming the prompt (chunked prefill): feed the
+                # next known token, ignore the logits
+                self._tokens[slot] = req.pending.pop(0)
+                continue
+            tok = self._sample(logits[slot, 0], req)
+            req.generated.append(tok)
+            if tok in req.stop_tokens:
+                req.stopped = True
+            self._tokens[slot] = tok
+        self.stats.record_decode(time.perf_counter() - t0, len(active))
+
+    def _sample(self, row, req: Request) -> int:
+        """Host-side sampling on the already-fetched logits row — no device
+        round-trips on the per-slot decode hot loop."""
+        row = np.asarray(row)[: self.cfg.vocab_size]  # mask vocab padding
+        if req.temperature <= 0:
+            return int(row.argmax())
+        g = self._rng.gumbel(size=row.shape)  # Gumbel-max == categorical
+        return int((row / req.temperature + g).argmax())

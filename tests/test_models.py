@@ -41,9 +41,7 @@ CFGS = {
 def _decode_all(bb, params, toks, cache, frames=None):
     if bb.cfg.family == "audio":
         mem = bb.encode(params, frames)
-        blk = bb._block(cross=True)
-        cache["cross"] = jax.vmap(
-            lambda bp: blk.attn.build_memory_cache(bp["xattn"], mem))(params["blocks"])
+        cache["cross"] = bb.build_cross_cache(params, mem)
     outs = []
     for i in range(toks.shape[1]):
         lg, cache = bb.decode(params, toks[:, i:i + 1], cache, jnp.int32(i))

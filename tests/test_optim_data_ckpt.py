@@ -1,6 +1,7 @@
 """Optimizers/schedules, data pipeline and checkpoint substrate tests."""
 import os
 import tempfile
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +9,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.checkpoint import list_checkpoints, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (list_checkpoints, read_latest_step,
+                              restore_checkpoint, save_checkpoint)
 from repro.data import (FederatedRounds, dirichlet_partition,
                         label_shard_partition, partition_sizes, synthetic)
 from repro.optim import (SGD, Adam, AdamW, clip_by_global_norm, constant,
@@ -214,7 +216,45 @@ def test_checkpoint_multiple_steps_and_latest():
         for s in (10, 20, 30):
             save_checkpoint(d, {"x": jnp.full(2, float(s))}, step=s)
         assert list_checkpoints(d) == [10, 20, 30]
+        assert read_latest_step(d) == 30
         got, man = restore_checkpoint(d)
         assert man["step"] == 30
         got15, _ = restore_checkpoint(d, step=20)
         np.testing.assert_allclose(np.asarray(got15["x"]), 20.0)
+
+
+def test_read_latest_step_without_checkpoints():
+    with tempfile.TemporaryDirectory() as d:
+        assert read_latest_step(d) is None
+        assert read_latest_step(os.path.join(d, "missing")) is None
+
+
+def test_restore_while_writing_never_sees_torn_latest():
+    """Regression for the non-atomic LATEST write: a serve process polling
+    LATEST while the trainer saves must always see a complete pointer to a
+    complete checkpoint (the old truncate-then-write could surface an empty
+    LATEST or a half-written step dir mid-save)."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, {"x": jnp.zeros(64)}, step=0)
+        failures = []
+
+        def writer():
+            for s in range(1, 16):
+                save_checkpoint(d, {"x": jnp.full(64, float(s))}, step=s)
+
+        t = threading.Thread(target=writer)
+        t.start()
+        while t.is_alive():
+            step = read_latest_step(d)
+            if step is None:
+                failures.append("torn LATEST")
+                break
+            got, man = restore_checkpoint(d)  # must be a complete step dir
+            if man["step"] != int(np.asarray(got["x"])[0]):
+                failures.append(f"half-written step {man['step']}")
+                break
+        t.join()
+        assert not failures, failures
+        assert read_latest_step(d) == 15
+        # no temp droppings left behind
+        assert not [f for f in os.listdir(d) if f.startswith(".LATEST.tmp")]
