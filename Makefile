@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench bench-dryrun bench-serve docs-check \
-        quickstart serve-example strategies-parity
+.PHONY: test test-fast lint bench bench-dryrun bench-serve bench-rounds \
+        sweep docs-check quickstart serve-example strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -17,7 +17,7 @@ test-fast:
 # the public entry points import (catches syntax + import drift cheaply).
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint"
+	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint, repro.run, repro.run.experiments, repro.data, repro.evals"
 
 # Execute every runnable snippet in docs/*.md (the docs-drift gate).
 docs-check:
@@ -36,6 +36,17 @@ bench-dryrun:
 # Serving-path benchmark with machine-readable BENCH_serve.json artifact.
 bench-serve:
 	$(PY) benchmarks/run.py --only serve --fast --json
+
+# Round-loop throughput (legacy blocking loop vs repro.run driver) with
+# machine-readable BENCH_rounds.json artifact — the perf trajectory row.
+bench-rounds:
+	$(PY) benchmarks/run.py --only rounds --fast --json
+
+# The paper's robustness-to-reduced-communication curve in one command
+# (FID stand-in vs K, FedGAN vs the per-step distributed baseline).
+sweep:
+	$(PY) -m repro.run.experiments --experiment toy_2d \
+	    --sweep K=1,5,20,50 --compare distributed --steps 1000
 
 quickstart:
 	$(PY) examples/quickstart.py --K 20

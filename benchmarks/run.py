@@ -8,6 +8,7 @@
 #   Fig 3  (PG&E household clusters)     -> bench_timeseries.bench_household
 #   Fig 4  (EV charging clusters)        -> bench_timeseries.bench_ev
 #   §3.2   (communication complexity)    -> bench_comm
+#   rounds (legacy loop vs repro.run driver) -> bench_rounds
 #   Lem1/2 (drift vs bounds)             -> bench_lemmas
 #   (g)    (roofline from dry-run)       -> bench_roofline
 #   kernels (Pallas vs oracle)           -> bench_kernels
@@ -39,8 +40,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_comm, bench_images, bench_kernels,
-                            bench_lemmas, bench_roofline, bench_serve,
-                            bench_timeseries, bench_toy, common)
+                            bench_lemmas, bench_roofline, bench_rounds,
+                            bench_serve, bench_timeseries, bench_toy, common)
 
     fast = args.fast
     suites = {
@@ -56,6 +57,7 @@ def main() -> None:
         "roofline": bench_roofline.main,
         "kernels": bench_kernels.main,
         "serve": lambda: bench_serve.main(fast=fast),
+        "rounds": lambda: bench_rounds.main(fast=fast),
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

@@ -183,19 +183,30 @@ class FedGAN:
         return gd, gg, {"d_loss": ld, "g_loss": lg}
 
     def _step(self, state, step_input):
-        """One parallel step across all agents.  step_input = (batch, seeds)
-        with leading (P, A) axes."""
-        batch, seeds = step_input
+        """One parallel step across all agents.  step_input = (batch, rngs)
+        with leading (P, A) axes.
+
+        ``rngs`` is a (P, A) typed PRNG key array (the canonical path —
+        keys are split off the round key, so no two agents/steps can
+        collide).  A (P, A) uint32 array is also accepted as a compat shim
+        for the seed-threading callers: each seed is folded into a fixed
+        base key, which has birthday-collision risk across the fleet and
+        survives only for bit-parity with pre-`repro.run` trajectories."""
+        batch, rngs = step_input
         strat = self.cfg.resolve_strategy()
         n = state["step"]
         lr_a = self.scales.a(n.astype(jnp.float32))
         lr_b = self.scales.b(n.astype(jnp.float32))
 
-        def agent_grads(params, b, seed):
-            rng = jax.random.fold_in(jax.random.key(0), seed)
-            return self._local_grads(params, b, rng)
+        if jnp.issubdtype(rngs.dtype, jax.dtypes.prng_key):
+            def agent_grads(params, b, rng):
+                return self._local_grads(params, b, rng)
+        else:  # legacy uint32 seeds
+            def agent_grads(params, b, seed):
+                rng = jax.random.fold_in(jax.random.key(0), seed)
+                return self._local_grads(params, b, rng)
 
-        gd, gg, metrics = jax.vmap(jax.vmap(agent_grads))(state["params"], batch, seeds)
+        gd, gg, metrics = jax.vmap(jax.vmap(agent_grads))(state["params"], batch, rngs)
 
         # per-step aggregation hook (PerStepGradAvg averages grads here —
         # the paper's distributed-GAN baseline communication pattern)
@@ -222,10 +233,9 @@ class FedGAN:
     # ------------------------------------------------------------------
     # one K-step round (the jitted unit; this is what the dry-run lowers)
     # ------------------------------------------------------------------
-    def round(self, state, batches, seeds):
-        """batches: pytree with leading (K, P, A, ...); seeds: (K, P, A) u32.
-        Runs K local steps then syncs per the configured strategy."""
-        self.cfg.validate()
+    def _run_round(self, state, xs, body):
+        """Shared K-step scan + strategy sync.  ``xs`` leaves carry a
+        leading K dim; ``body(state, x)`` is one parallel step."""
         strat = self.cfg.resolve_strategy()
         K = self.cfg.sync_interval
         K1 = strat.intra_interval
@@ -234,16 +244,44 @@ class FedGAN:
             segs = K // K1
 
             def seg_body(st, seg_in):
-                st, m = jax.lax.scan(self._step, st, seg_in)
+                st, m = jax.lax.scan(body, st, seg_in)
                 return strat.segment_sync(self, st), m
 
-            seg_in = tmap(lambda x: x.reshape((segs, K1) + x.shape[1:]),
-                          (batches, seeds))
+            seg_in = tmap(lambda x: x.reshape((segs, K1) + x.shape[1:]), xs)
             state, metrics = jax.lax.scan(seg_body, state, seg_in)
             metrics = tmap(lambda x: x.reshape((K,) + x.shape[2:]), metrics)
         else:
-            state, metrics = jax.lax.scan(self._step, state, (batches, seeds))
+            state, metrics = jax.lax.scan(body, state, xs)
         return strat.round_sync(self, state), metrics
+
+    def round(self, state, batches, seeds):
+        """batches: pytree with leading (K, P, A, ...); seeds: (K, P, A) —
+        uint32 seeds (legacy) or a typed PRNG key array.  Runs K local
+        steps then syncs per the configured strategy."""
+        self.cfg.validate()
+        return self._run_round(state, (batches, seeds), self._step)
+
+    def _step_from_data(self, data, state, key):
+        """One step whose minibatch is sampled *inside* the trace: draw a
+        (P, A, batch, ...) batch from ``data`` and per-agent step keys."""
+        P, A = self.cfg.agent_grid
+        k_batch, k_step = jax.random.split(key)
+        batch = data.sample_step(k_batch)
+        rngs = jax.random.split(k_step, P * A).reshape(P, A)
+        return self._step(state, (batch, rngs))
+
+    def round_from_data(self, state, data, key):
+        """Sampling-aware round: the K minibatches are drawn *inside* the
+        jitted round from ``data`` (anything with ``sample_step(key) ->
+        (P, A, batch, ...) pytree``, e.g. a device-resident
+        ``repro.data.DeviceFederatedData``) instead of being materialized
+        on host as a (K, P, A, batch, ...) tensor.  Eliminates the K× per
+        round host->device transfer and the per-agent assembly loop; RNG
+        is a properly threaded split key (no seed folding)."""
+        self.cfg.validate()
+        keys = jax.random.split(key, self.cfg.sync_interval)
+        body = lambda st, k: self._step_from_data(data, st, k)
+        return self._run_round(state, keys, body)
 
     # ------------------------------------------------------------------
     def agent_params(self, state, p: int = 0, a: int = 0):

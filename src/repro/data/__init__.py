@@ -1,12 +1,17 @@
 from repro.data import synthetic
 from repro.data.federated import (
+    DeviceFederatedData,
+    FederatedData,
     FederatedRounds,
+    StreamingFederatedData,
     dirichlet_partition,
     label_shard_partition,
     partition_sizes,
+    round_key_schedule,
 )
 
 __all__ = [
-    "FederatedRounds", "dirichlet_partition", "label_shard_partition",
-    "partition_sizes", "synthetic",
+    "DeviceFederatedData", "FederatedData", "FederatedRounds",
+    "StreamingFederatedData", "dirichlet_partition", "label_shard_partition",
+    "partition_sizes", "round_key_schedule", "synthetic",
 ]

@@ -24,16 +24,16 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.checkpoint import save_checkpoint
 from repro.core import (ACGAN, CONDITIONAL, FedGAN, FedGANConfig, GANTask,
                         make_gan_task, strategies)
-from repro.data import FederatedRounds, synthetic
+from repro.data import (DeviceFederatedData, FederatedRounds,
+                        StreamingFederatedData, synthetic)
 from repro.optim import Adam, constant, equal_timescale
 
 tmap = jax.tree_util.tree_map
@@ -81,7 +81,16 @@ def cgan1d_task(seq_len=24, label_dim=5):
 class RunSpec:
     """Everything one simulated federated GAN run needs (agents stacked on
     one host).  ``build()`` gives the (FedGAN, FederatedRounds) pair;
-    ``run()`` executes the round loop."""
+    ``run()`` executes the round loop.
+
+    Since the ``repro.run`` runtime landed, ``run()`` is a thin shim over
+    :class:`repro.run.RoundDriver`: the default ``data_mode="stream"``
+    keeps trajectories bit-identical to the pre-runtime blocking loop
+    (held by ``tests/test_run_driver.py``), while ``data_mode="device"``
+    switches to the device-resident sampling pipeline (different RNG
+    stream, much less per-round host work).  Prefer driving the runtime
+    directly for new code; this object remains the one-stop experiment
+    config."""
 
     task: GANTask
     agent_data: list
@@ -98,6 +107,14 @@ class RunSpec:
     seed: int = 0
     log_every: int = 1
     ckpt_dir: str = ""
+    data_mode: str = "stream"       # "stream" (legacy-parity) | "device"
+    rounds_per_chunk: int = 1       # device mode: rounds per scan dispatch
+    eval_every: int = 0             # rounds between eval-hook points
+    eval_hooks: Any = ()
+
+    @property
+    def n_rounds(self) -> int:
+        return max(self.steps // self.K, 1)
 
     def build(self):
         fed = FedGAN(self.task,
@@ -112,28 +129,37 @@ class RunSpec:
                                  sample_extra=self.sample_extra)
         return fed, rounds
 
-    def run(self):
-        fed, rounds = self.build()
+    def build_data(self):
+        """The FederatedData pipeline ``data_mode`` denotes."""
+        if self.data_mode == "device":
+            return DeviceFederatedData.from_agent_data(
+                self.agent_data, self.agent_grid, self.batch_size,
+                sample_extra=self.sample_extra)
+        if self.data_mode == "stream":
+            return StreamingFederatedData.from_agent_data(
+                self.agent_data, self.agent_grid, self.batch_size, self.K,
+                sample_extra=self.sample_extra)
+        raise ValueError(f"unknown data_mode {self.data_mode!r} "
+                         "(expected 'stream' or 'device')")
+
+    def run_result(self):
+        """Execute through the ``repro.run`` runtime; returns the full
+        :class:`repro.run.RunResult` (state, history, evals, timings)."""
+        from repro.run.driver import RoundDriver
+        fed, _ = self.build()
         state = fed.init_state(jax.random.key(self.seed))
-        round_fn = jax.jit(fed.round)
-        rng = jax.random.key(self.seed + 1)
-        history = []
-        n_rounds = max(self.steps // self.K, 1)
-        t0 = time.time()
-        for r in range(n_rounds):
-            rng, rb = jax.random.split(rng)
-            batches, seeds = rounds.round_batches(rb)
-            state, metrics = round_fn(state, batches, seeds)
-            m = tmap(lambda x: float(jnp.mean(x)), metrics)
-            history.append(m)
-            if self.log_every and (r % self.log_every == 0 or r == n_rounds - 1):
-                print(f"round {r:5d}/{n_rounds} step {(r+1)*self.K:6d} "
-                      f"d_loss={m['d_loss']:.4f} g_loss={m['g_loss']:.4f} "
-                      f"({time.time()-t0:.1f}s)", flush=True)
-            if self.ckpt_dir and (r + 1) % max(n_rounds // 4, 1) == 0:
-                save_checkpoint(self.ckpt_dir, state, step=(r + 1) * self.K,
-                                metadata={"round": r, "K": self.K})
-        return fed, state, history
+        driver = RoundDriver(
+            fed, self.build_data(), self.n_rounds,
+            log_every=self.log_every,
+            eval_every=self.eval_every, eval_hooks=self.eval_hooks,
+            ckpt_dir=self.ckpt_dir,
+            ckpt_every=max(self.n_rounds // 4, 1) if self.ckpt_dir else 0,
+            rounds_per_chunk=self.rounds_per_chunk)
+        return driver.run(jax.random.key(self.seed + 1), state=state)
+
+    def run(self):
+        """Legacy entry point: returns (fed, state, history)."""
+        return self.run_result().legacy_tuple()
 
 
 def train_fedgan(task, *, agent_data, agent_grid, K, steps, batch_size,
@@ -150,78 +176,146 @@ def train_fedgan(task, *, agent_data, agent_grid, K, steps, batch_size,
                    log_every=log_every, ckpt_dir=ckpt_dir).run()
 
 
-def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
-                   strategy=None, ckpt_dir: str = ""):
+def _pooled_real(agent_data, seed: int = 0):
+    """Cross-agent pooled real samples, shuffled so any prefix is an
+    unbiased draw from the GLOBAL distribution (what the paper's metrics
+    compare against — never one agent's slice)."""
+    xs = np.concatenate([np.asarray(d["x"]) for d in agent_data])
+    return xs[np.random.RandomState(seed).permutation(len(xs))]
+
+
+def experiment_spec(name: str, *, K: int | None = None,
+                    steps: int | None = None, seed: int = 0, strategy=None,
+                    ckpt_dir: str = "", batch_size: int | None = None,
+                    agents: int | None = None, log_every: int | None = None,
+                    eval_every: int = 0, data_mode: str = "stream",
+                    rounds_per_chunk: int = 1):
+    """Build (RunSpec, EvalSuite) for one of the paper's experiments on the
+    synthetic stand-in data.  ``batch_size``/``agents``/``log_every``
+    override the experiment-config defaults (the CLI knobs); the EvalSuite
+    feeds the ``repro.run`` eval harness and the K-sweep runner."""
     from repro.configs.paper_gans import ALL_EXPERIMENTS, optimizer_for, scales_for
+    from repro.run.evals import EvalSuite, eval_hook
     exp = ALL_EXPERIMENTS[name]
     K = K or exp.default_K
     steps = steps or exp.iterations
-    B = exp.num_agents
+    B = agents or exp.num_agents
+    batch_size = batch_size or exp.batch_size
     rng = jax.random.key(seed)
 
     if name == "toy_2d":
-        task, _ = toy2d_task()
+        task, (G, _) = toy2d_task()
         agent_data = [{"x": synthetic.sample_2d_segment(
             jax.random.fold_in(rng, i), 4096, i, B)} for i in range(B)]
         extra = lambda r, s: {"z": jax.random.uniform(r, s, minval=-1, maxval=1)}
+        suite = EvalSuite(
+            real=_pooled_real(agent_data, seed),
+            sample_fake=lambda gp, r, n: G.apply(
+                gp, jax.random.uniform(r, (n,), minval=-1, maxval=1)))
     elif name == "mixed_gaussian":
-        task, _ = mlp_gan_task()
+        task, (G, _) = mlp_gan_task()
+        # 8 modes on the circle; with an --agents override beyond 4 the
+        # mode assignment wraps (agents share modes, still non-iid pairs)
         agent_data = [{"x": synthetic.sample_mixed_gaussian(
-            jax.random.fold_in(rng, i), 8192, mode_subset=[2 * i, 2 * i + 1])}
+            jax.random.fold_in(rng, i), 8192,
+            mode_subset=[(2 * i) % 8, (2 * i + 1) % 8])}
             for i in range(B)]
         extra = lambda r, s: {"z": jax.random.normal(r, s + (2,))}
+        suite = EvalSuite(
+            real=_pooled_real(agent_data, seed),
+            sample_fake=lambda gp, r, n: G.apply(
+                gp, jax.random.normal(r, (n, 2))),
+            modes=np.asarray(synthetic.mixed_gaussian_modes()))
     elif name == "swiss_roll":
-        task, _ = mlp_gan_task()
+        task, (G, _) = mlp_gan_task()
         agent_data = [{"x": synthetic.sample_swiss_roll(
             jax.random.fold_in(rng, i), 8192,
             t_range=(0.25 + 0.75 * i / B, 0.25 + 0.75 * (i + 1) / B))}
             for i in range(B)]
         extra = lambda r, s: {"z": jax.random.normal(r, s + (2,))}
+        suite = EvalSuite(
+            real=_pooled_real(agent_data, seed),
+            sample_fake=lambda gp, r, n: G.apply(
+                gp, jax.random.normal(r, (n, 2))))
     elif name in ("image_acgan", "celeba_acgan"):
         ncls = 16 if name == "celeba_acgan" else 10
-        task, _ = acgan_task(hw=16, num_classes=ncls)
+        task, (G, _) = acgan_task(hw=16, num_classes=ncls)
         per = max(ncls // B, 1)
         def mk(i):
+            # class slice wraps under an --agents override larger than the
+            # class count (keeps randint bounds valid: lo < hi <= ncls)
+            lo = (i * per) % ncls
             lab = jax.random.randint(jax.random.fold_in(rng, 100 + i), (2048,),
-                                     i * per, min((i + 1) * per, ncls))
+                                     lo, min(lo + per, ncls))
             img = synthetic.sample_class_images(
                 jax.random.fold_in(rng, 200 + i), 2048, lab, hw=16,
                 num_classes=ncls)
             return {"x": img, "y": lab}
         agent_data = [mk(i) for i in range(B)]
         extra = lambda r, s: {"z": jax.random.normal(r, s + (62,))}
+
+        def sample_images(gp, r, n, ncls=ncls):
+            kz, kl = jax.random.split(r)
+            lab = jax.random.randint(kl, (n,), 0, ncls)
+            return G.apply(gp, jax.random.normal(kz, (n, 62)), lab)
+
+        suite = EvalSuite(real=_pooled_real(agent_data, seed),
+                          sample_fake=sample_images)
     elif name == "timeseries_cgan":
-        task, _ = cgan1d_task()
+        task, (G, _) = cgan1d_task()
         def mk(i):
-            cz = jnp.full((4096,), i, jnp.int32)
+            cz = jnp.full((4096,), i % 5, jnp.int32)  # 5 climate zones
             x = synthetic.sample_household_load(jax.random.fold_in(rng, i), 4096,
                                                 climate_zone=cz)
             return {"x": x, "y": jax.nn.one_hot(cz, 5)}
         agent_data = [mk(i) for i in range(B)]
         extra = lambda r, s: {"z": jax.random.normal(r, s + (24,))}
+
+        def sample_profiles(gp, r, n):
+            kz, kl = jax.random.split(r)
+            y = jax.nn.one_hot(jax.random.randint(kl, (n,), 0, 5), 5)
+            return G.apply(gp, jax.random.normal(kz, (n, 24)), y)
+
+        suite = EvalSuite(real=_pooled_real(agent_data, seed),
+                          sample_fake=sample_profiles, kind="timeseries")
     else:
         raise KeyError(name)
 
     opt_d, opt_g = optimizer_for(exp)
-    return RunSpec(
+    spec = RunSpec(
         task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
-        batch_size=exp.batch_size, scales=scales_for(exp), opt_d=opt_d,
+        batch_size=batch_size, scales=scales_for(exp), opt_d=opt_d,
         opt_g=opt_g, strategy=strategy, sample_extra=extra, seed=seed,
-        log_every=max((steps // K) // 10, 1), ckpt_dir=ckpt_dir).run()
+        log_every=max((steps // K) // 10, 1) if log_every is None else log_every,
+        ckpt_dir=ckpt_dir, data_mode=data_mode,
+        rounds_per_chunk=rounds_per_chunk, eval_every=eval_every,
+        eval_hooks=(eval_hook(suite, seed=seed),) if eval_every else ())
+    return spec, suite
 
 
-def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None,
-                   ckpt_dir: str = ""):
-    """Federated adversarial training of a reduced assigned backbone.
+def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
+                   strategy=None, ckpt_dir: str = "", batch_size=None,
+                   agents=None, log_every=None, eval_every: int = 0,
+                   data_mode: str = "stream"):
+    spec, _ = experiment_spec(
+        name, K=K, steps=steps, seed=seed, strategy=strategy,
+        ckpt_dir=ckpt_dir, batch_size=batch_size, agents=agents,
+        log_every=log_every, eval_every=eval_every, data_mode=data_mode)
+    return spec.run()
 
-    With ``ckpt_dir`` the run checkpoints its FedGAN state, which a
-    ``repro.serve`` engine in another process can hot-reload live — the
-    two-terminal walkthrough in docs/serving.md."""
+
+def arch_smoke_spec(arch: str, *, steps: int, K: int, seed: int,
+                    strategy=None, ckpt_dir: str = "",
+                    batch_size: int | None = None, agents: int | None = None,
+                    log_every: int | None = None, data_mode: str = "stream",
+                    rounds_per_chunk: int = 1) -> RunSpec:
+    """RunSpec for federated adversarial training of a reduced assigned
+    backbone (see :func:`run_arch_smoke`)."""
     from repro.configs import get_config
     from repro.launch.steps import make_lm_gan_task
     cfg = get_config(arch).smoke()
     task = make_lm_gan_task(cfg)
-    B = 4
+    B = agents or 4
     T = 32
     rng = jax.random.key(seed)
     agent_data = []
@@ -234,9 +328,24 @@ def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None,
         agent_data.append(d)
     return RunSpec(
         task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
-        batch_size=8, scales=equal_timescale(constant(1e-3)),
+        batch_size=batch_size or 8, scales=equal_timescale(constant(1e-3)),
         opt_d=Adam(), opt_g=Adam(), strategy=strategy, seed=seed,
-        log_every=1, ckpt_dir=ckpt_dir).run()
+        log_every=1 if log_every is None else log_every, ckpt_dir=ckpt_dir,
+        data_mode=data_mode, rounds_per_chunk=rounds_per_chunk)
+
+
+def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None,
+                   ckpt_dir: str = "", batch_size=None, agents=None,
+                   log_every=None, data_mode: str = "stream"):
+    """Federated adversarial training of a reduced assigned backbone.
+
+    With ``ckpt_dir`` the run checkpoints its FedGAN state, which a
+    ``repro.serve`` engine in another process can hot-reload live — the
+    two-terminal walkthrough in docs/serving.md."""
+    return arch_smoke_spec(
+        arch, steps=steps, K=K, seed=seed, strategy=strategy,
+        ckpt_dir=ckpt_dir, batch_size=batch_size, agents=agents,
+        log_every=log_every, data_mode=data_mode).run()
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +380,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="adaptive_k: post-warmup rounds between syncs")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--batch-size", type=int, default=0,
+                    help="per-agent minibatch size (0 = experiment default)")
+    ap.add_argument("--agents", type=int, default=0,
+                    help="number of agents B (0 = experiment default)")
+    ap.add_argument("--log-every", type=int, default=-1,
+                    help="rounds between metric logs; 0 silences, "
+                         "-1 = experiment default")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="rounds between repro.evals scorings of the "
+                         "averaged generator (experiments only; 0 = off)")
+    ap.add_argument("--data-mode", default="stream",
+                    choices=["stream", "device"],
+                    help="round data pipeline: host-streaming (legacy-"
+                         "parity) or device-resident in-round sampling")
     return ap
 
 
@@ -312,14 +435,22 @@ def main():
     ap = build_parser()
     args = ap.parse_args()
     strategy = strategy_from_args(args)
+    overrides = dict(batch_size=args.batch_size or None,
+                     agents=args.agents or None,
+                     log_every=None if args.log_every < 0 else args.log_every,
+                     data_mode=args.data_mode)
 
     if args.experiment:
         run_experiment(args.experiment, K=args.K or None, steps=args.steps or None,
-                       seed=args.seed, strategy=strategy, ckpt_dir=args.ckpt_dir)
+                       seed=args.seed, strategy=strategy, ckpt_dir=args.ckpt_dir,
+                       eval_every=args.eval_every, **overrides)
     elif args.arch:
+        if args.eval_every:
+            ap.error("--eval-every needs --experiment (no eval suite exists "
+                     "for backbone smoke runs)")
         run_arch_smoke(args.arch, steps=args.steps or 20, K=args.K or 5,
                        seed=args.seed, strategy=strategy,
-                       ckpt_dir=args.ckpt_dir)
+                       ckpt_dir=args.ckpt_dir, **overrides)
     else:
         ap.error("need --experiment or --arch")
 

@@ -1,0 +1,19 @@
+# Pillar four: the streaming training runtime.  A donated, chunked round
+# driver over the FederatedData pipelines, an eval harness on the
+# intermediary's averaged params, and the paper-figure K-sweep runner.
+from repro.run.driver import RoundDriver, RunResult, train
+from repro.run.evals import EvalSuite, eval_hook, evaluate, final_fd
+
+__all__ = [
+    "EvalSuite", "RoundDriver", "RunResult", "eval_hook", "evaluate",
+    "final_fd", "run_sweep", "summary_table", "train",
+]
+
+
+def __getattr__(name):
+    # lazy: keeps `python -m repro.run.experiments` free of the runpy
+    # double-import warning
+    if name in ("run_sweep", "summary_table"):
+        from repro.run import experiments
+        return getattr(experiments, name)
+    raise AttributeError(name)

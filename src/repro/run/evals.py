@@ -1,0 +1,85 @@
+"""Eval harness for the training runtime — wires ``repro.evals`` into the
+driver as periodic hooks on the intermediary's averaged parameters.
+
+An :class:`EvalSuite` describes how to score one experiment: the pooled
+real samples, how to draw generated samples from the averaged generator,
+and which metrics apply (the FD stand-in always; mode coverage when the
+reference modes are known; centroid matching for the time-series
+experiments).  :func:`evaluate` runs it once; :func:`eval_hook` packages
+it for ``RoundDriver(eval_hooks=...)``.
+
+Evaluation always scores the *intermediary's* parameters (the weighted
+average of eq. (2), no broadcast) — the object the paper's figures track —
+never any single agent's copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.evals import centroid_match_score, fd_score, mode_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalSuite:
+    """One experiment's evaluation recipe.
+
+    ``sample_fake(gen_params, rng, n)`` draws n samples from the averaged
+    generator; ``real`` holds pooled (cross-agent) real samples of the same
+    shape.  ``modes`` enables mode-coverage stats; ``kind="timeseries"``
+    additionally reports the centroid-matching RMSE of Fig. 3/4.
+    """
+
+    real: Any
+    sample_fake: Callable[[Any, jax.Array, int], Any]
+    modes: Any = None
+    kind: str = "fd"           # "fd" | "timeseries"
+    feat_dim: int = 64
+    mode_radius: float = 0.5
+
+
+def evaluate(suite: EvalSuite, fed, state, rng, *, n: int = 1024) -> dict:
+    """Score the intermediary's generator: always the FD stand-in (the
+    fixed-random-feature Fréchet distance of ``repro.evals.fd``), plus the
+    suite's extra metrics.  Returns a flat dict of floats."""
+    k_fake, k_feat = jax.random.split(rng)
+    gen = fed.averaged_params(state)["gen"]
+    n_real = int(jax.tree_util.tree_leaves(suite.real)[0].shape[0])
+    n = min(n, n_real)
+    fake = np.asarray(suite.sample_fake(gen, k_fake, n))
+    real = np.asarray(suite.real[:n])
+    if not np.isfinite(fake).all():
+        return {"fd": float("inf"), "nonfinite": 1.0}
+    out = {"fd": fd_score(k_feat, real, fake, feat_dim=suite.feat_dim)}
+    if suite.modes is not None:
+        covered, hq, _ = mode_stats(fake.reshape(n, -1), suite.modes,
+                                    radius=suite.mode_radius)
+        out["modes_covered"] = float(covered)
+        out["high_quality_frac"] = hq
+    if suite.kind == "timeseries":
+        cm = centroid_match_score(real.reshape(n, -1), fake.reshape(n, -1))
+        out["centroid_rmse"] = cm["matched_rmse"]
+        out["centroid_rmse_random"] = cm["random_rmse"]
+    return out
+
+
+def eval_hook(suite: EvalSuite, *, seed: int = 0, n: int = 1024) -> Callable:
+    """An ``eval_hooks`` entry for the driver: ``fn(fed, state, round_idx)
+    -> dict``.  The PRNG key is folded from the round index so repeated
+    evaluations are comparable but not identical draws."""
+
+    def hook(fed, state, round_idx: int) -> dict:
+        rng = jax.random.fold_in(jax.random.key(seed), round_idx)
+        return evaluate(suite, fed, state, rng, n=n)
+
+    return hook
+
+
+def final_fd(suite: EvalSuite, fed, state, *, seed: int = 0,
+             n: int = 2048) -> dict:
+    """End-of-run evaluation at a larger sample budget (sweep summaries)."""
+    return evaluate(suite, fed, state, jax.random.key(seed), n=n)

@@ -1,0 +1,234 @@
+"""Unit tests for repro.evals — the metric substrate the run-time eval
+harness (repro.run.evals) and the K-sweep figures stand on.
+
+Each metric is checked against hand-computable fixtures: exact zeros /
+known closed forms for the Fréchet distance, planted clusters for k-means,
+and hand-placed samples for the mode-coverage stats.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.evals import (centroid_match_score, fd_score, frechet_distance,
+                         kmeans, mode_stats, random_feature_fn,
+                         wasserstein_1d_proj)
+
+
+# ---------------------------------------------------------------------------
+# Fréchet distance (the FID stand-in)
+# ---------------------------------------------------------------------------
+
+
+def _gauss(rng, n, mean, scale=1.0, d=4):
+    return rng.randn(n, d) * scale + np.asarray(mean)
+
+
+def test_frechet_identical_distributions_is_zero():
+    x = np.random.RandomState(0).randn(512, 6)
+    assert frechet_distance(x, x) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_frechet_symmetry():
+    rng = np.random.RandomState(1)
+    a, b = _gauss(rng, 400, [0, 0, 0, 0]), _gauss(rng, 400, [1, 0, -1, 2])
+    assert frechet_distance(a, b) == pytest.approx(frechet_distance(b, a),
+                                                   rel=1e-6)
+
+
+def test_frechet_mean_shift_closed_form():
+    """For equal covariances the distance reduces to ||mu_r - mu_f||^2."""
+    rng = np.random.RandomState(2)
+    base = rng.randn(20000, 3)
+    shift = np.asarray([1.5, -0.5, 2.0])
+    d2 = frechet_distance(base, base + shift)
+    assert d2 == pytest.approx(float(shift @ shift), rel=0.05)
+
+
+def test_frechet_common_translation_invariance():
+    """Shifting BOTH sets by one vector must not move the score."""
+    rng = np.random.RandomState(3)
+    a, b = _gauss(rng, 600, [0, 0, 0, 0]), _gauss(rng, 600, [2, 0, 0, 0])
+    t = np.asarray([10.0, -3.0, 7.0, 1.0])
+    assert frechet_distance(a + t, b + t) == pytest.approx(
+        frechet_distance(a, b), rel=1e-4)
+
+
+def test_frechet_common_rotation_invariance():
+    """The Gaussian-Fréchet form is invariant under a shared orthogonal
+    transform (means rotate together, covariances conjugate together)."""
+    rng = np.random.RandomState(4)
+    a = _gauss(rng, 800, [1, 0, 0, 0], scale=1.3)
+    b = _gauss(rng, 800, [0, 2, 0, 0], scale=0.7)
+    q, _ = np.linalg.qr(rng.randn(4, 4))
+    assert frechet_distance(a @ q, b @ q) == pytest.approx(
+        frechet_distance(a, b), rel=1e-3)
+
+
+def test_frechet_orders_increasing_separation():
+    rng = np.random.RandomState(5)
+    base = _gauss(rng, 500, [0, 0, 0, 0])
+    prev = -1.0
+    for shift in (0.5, 1.0, 2.0, 4.0):
+        d = frechet_distance(base, _gauss(rng, 500, [shift, 0, 0, 0]))
+        assert d > prev
+        prev = d
+
+
+def test_fd_score_end_to_end_separates():
+    """fd_score (random-feature pipeline) must score same-distribution far
+    below different-distribution, with the same shared feature map."""
+    rng = np.random.RandomState(6)
+    key = jax.random.key(0)
+    real = rng.randn(800, 2)
+    same = rng.randn(800, 2)
+    far = rng.randn(800, 2) + 5.0
+    assert fd_score(key, real, same) * 10 < fd_score(key, real, far)
+
+
+def test_random_feature_fn_deterministic_given_key():
+    f1 = random_feature_fn(jax.random.key(7), in_dim=3)
+    f2 = random_feature_fn(jax.random.key(7), in_dim=3)
+    x = np.random.RandomState(0).randn(10, 3).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(f1(x)), np.asarray(f2(x)))
+
+
+# ---------------------------------------------------------------------------
+# k-means + centroid matching (time-series figures)
+# ---------------------------------------------------------------------------
+
+
+def _planted_clusters(rng, centers, per=100, noise=0.02):
+    return np.concatenate([c + noise * rng.randn(per, len(c))
+                           for c in centers])
+
+
+def test_kmeans_recovers_planted_centroids():
+    centers = np.asarray([[0.0, 0.0], [5.0, 5.0], [-5.0, 5.0]])
+    x = _planted_clusters(np.random.RandomState(0), centers)
+    cent, assign, sizes = kmeans(x, 3, seed=1)
+    # each planted center is within noise of one recovered centroid
+    d = np.linalg.norm(centers[:, None] - cent[None], axis=-1)
+    assert d.min(axis=1).max() < 0.1
+    assert sizes.sum() == len(x)
+    # sizes sorted descending, assignments consistent with the remap
+    assert (np.diff(sizes) <= 0).all()
+    for j in range(3):
+        pts = x[assign == j]
+        np.testing.assert_allclose(pts.mean(0), cent[j], atol=0.1)
+
+
+def test_kmeans_unequal_cluster_sizes_order():
+    rng = np.random.RandomState(2)
+    x = np.concatenate([_planted_clusters(rng, [[0.0, 0.0]], per=300),
+                        _planted_clusters(rng, [[8.0, 8.0]], per=50)])
+    cent, _, sizes = kmeans(x, 2, seed=0)
+    assert sizes[0] == 300 and sizes[1] == 50
+    np.testing.assert_allclose(cent[0], [0, 0], atol=0.1)
+
+
+def test_centroid_match_identical_data_beats_random():
+    rng = np.random.RandomState(3)
+    centers = rng.randn(5, 8) * 3
+    x = _planted_clusters(rng, centers, per=80)
+    out = centroid_match_score(x, x, k=5, top=5, seed=0)
+    assert out["matched_rmse"] == pytest.approx(0.0, abs=0.05)
+    assert out["matched_rmse"] < out["random_rmse"]
+    assert out["real_centroids"].shape == (5, 8)
+
+
+def test_centroid_match_detects_distribution_shift():
+    rng = np.random.RandomState(4)
+    centers = rng.randn(4, 6)
+    x = _planted_clusters(rng, centers, per=60)
+    y = _planted_clusters(rng, centers + 3.0, per=60)
+    near = centroid_match_score(x, x, k=4, top=4)["matched_rmse"]
+    far = centroid_match_score(x, y, k=4, top=4)["matched_rmse"]
+    assert far > near + 1.0
+
+
+# ---------------------------------------------------------------------------
+# mode coverage (mixed-Gaussian figure)
+# ---------------------------------------------------------------------------
+
+
+def test_mode_stats_hand_fixture():
+    modes = np.asarray([[0.0, 0.0], [4.0, 0.0], [0.0, 4.0], [4.0, 4.0]])
+    # 60 samples at mode0, 40 at mode1, nothing near modes 2/3, 10 garbage
+    samples = np.concatenate([
+        np.tile(modes[0], (60, 1)), np.tile(modes[1], (40, 1)),
+        np.full((10, 2), 100.0)])
+    covered, hq, counts = mode_stats(samples, modes, radius=0.3)
+    assert covered == 2
+    assert hq == pytest.approx(100 / 110)
+    np.testing.assert_array_equal(counts, [60, 40, 0, 0])
+
+
+def test_mode_stats_one_percent_threshold():
+    """A mode needs >= 1% of ALL samples to count as covered."""
+    modes = np.asarray([[0.0, 0.0], [4.0, 0.0]])
+    samples = np.concatenate([np.tile(modes[0], (995, 1)),
+                              np.tile(modes[1], (5, 1))])
+    covered, _, _ = mode_stats(samples, modes, radius=0.3)
+    assert covered == 1  # 5/1000 < 1% -> mode1 not covered
+    samples = np.concatenate([np.tile(modes[0], (990, 1)),
+                              np.tile(modes[1], (10, 1))])
+    covered, _, _ = mode_stats(samples, modes, radius=0.3)
+    assert covered == 2
+
+
+def test_mode_stats_radius_gates_quality():
+    modes = np.asarray([[0.0, 0.0]])
+    samples = np.asarray([[0.1, 0.0], [0.0, 0.25], [1.0, 1.0]])
+    covered, hq, _ = mode_stats(samples, modes, radius=0.3)
+    assert hq == pytest.approx(2 / 3)
+
+
+def test_wasserstein_1d_proj_zero_and_shift():
+    rng = np.random.RandomState(5)
+    a = rng.randn(2000, 2)
+    assert wasserstein_1d_proj(a, a) == pytest.approx(0.0, abs=1e-9)
+    shift = wasserstein_1d_proj(a, a + np.asarray([3.0, 0.0]))
+    # sliced-W of a pure translation ~ E|<t, v>| over random unit v < |t|
+    assert 0.5 < shift < 3.0
+
+
+# ---------------------------------------------------------------------------
+# the run-time eval harness on top
+# ---------------------------------------------------------------------------
+
+
+def test_evaluate_scores_averaged_generator():
+    """repro.run.evals.evaluate: perfect generator -> near-zero FD and full
+    mode coverage; collapsed generator -> worse FD, fewer modes."""
+    import jax.numpy as jnp
+
+    from repro.core import FedGAN, FedGANConfig, GANTask
+    from repro.run.evals import EvalSuite, evaluate
+
+    modes = np.asarray([[0.0, 0.0], [3.0, 0.0]])
+    rng = np.random.RandomState(0)
+    real = modes[rng.randint(0, 2, 2000)] + 0.05 * rng.randn(2000, 2)
+
+    def init(r):
+        return {"gen": {"w": jnp.zeros(())}, "disc": {"w": jnp.zeros(())}}
+
+    task = GANTask(init=init, disc_loss=lambda p, b, r: 0.0,
+                   gen_loss=lambda p, b, r: 0.0)
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, 2), sync_interval=1))
+    state = fed.init_state(jax.random.key(0))
+
+    def perfect(gp, r, n):
+        k1, k2 = jax.random.split(r)
+        idx = jax.random.randint(k1, (n,), 0, 2)
+        return jnp.asarray(modes)[idx] + 0.05 * jax.random.normal(k2, (n, 2))
+
+    def collapsed(gp, r, n):
+        return jnp.zeros((n, 2)) + 0.05 * jax.random.normal(r, (n, 2))
+
+    good = evaluate(EvalSuite(real=real, sample_fake=perfect, modes=modes),
+                    fed, state, jax.random.key(1), n=1000)
+    bad = evaluate(EvalSuite(real=real, sample_fake=collapsed, modes=modes),
+                   fed, state, jax.random.key(1), n=1000)
+    assert good["fd"] < bad["fd"]
+    assert good["modes_covered"] == 2.0 and bad["modes_covered"] == 1.0
+    assert good["high_quality_frac"] > 0.95

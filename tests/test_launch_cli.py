@@ -9,8 +9,9 @@ import pytest
 
 from repro.core.strategies import (AdaptiveK, FedAvgSync, Hierarchical,
                                    PartialSharing, SubsampledFedAvg)
-from repro.launch.train import (RunSpec, build_parser, run_experiment,
-                                strategy_from_args, toy2d_task)
+from repro.launch.train import (RunSpec, build_parser, experiment_spec,
+                                run_experiment, strategy_from_args,
+                                toy2d_task)
 
 
 def _args(*argv):
@@ -75,6 +76,86 @@ def test_run_experiment_hierarchical_end_to_end():
         strategy=Hierarchical(intra_interval=1))
     assert len(hist) == 2
     assert fed.cfg.resolve_strategy().name == "hierarchical"
+
+
+def test_run_overrides_reach_the_spec():
+    """--batch-size / --agents / --log-every were previously fixed by the
+    experiment config with no CLI override; they must plumb through to the
+    RunSpec (and reshape the agent fleet/data accordingly)."""
+    spec, suite = experiment_spec("toy_2d", K=4, steps=8, batch_size=16,
+                                  agents=3, log_every=7, eval_every=2)
+    assert spec.batch_size == 16
+    assert spec.agent_grid == (1, 3) and len(spec.agent_data) == 3
+    assert spec.log_every == 7
+    assert spec.eval_every == 2 and len(spec.eval_hooks) == 1
+    # defaults stay when not overridden
+    spec2, _ = experiment_spec("toy_2d", K=4, steps=8)
+    from repro.configs.paper_gans import ALL_EXPERIMENTS
+    exp = ALL_EXPERIMENTS["toy_2d"]
+    assert spec2.batch_size == exp.batch_size
+    assert spec2.agent_grid == (1, exp.num_agents)
+    assert spec2.eval_every == 0 and spec2.eval_hooks == ()
+
+
+def test_cli_exposes_run_overrides():
+    args = _args("--experiment", "toy_2d", "--batch-size", "32",
+                 "--agents", "3", "--log-every", "0", "--eval-every", "5",
+                 "--data-mode", "device")
+    assert args.batch_size == 32 and args.agents == 3
+    assert args.log_every == 0 and args.eval_every == 5
+    assert args.data_mode == "device"
+    # defaults: sentinel values that mean "keep the experiment config"
+    d = _args("--experiment", "toy_2d")
+    assert d.batch_size == 0 and d.agents == 0 and d.log_every == -1
+    assert d.eval_every == 0 and d.data_mode == "stream"
+    with pytest.raises(SystemExit):
+        _args("--experiment", "toy_2d", "--data-mode", "bogus")
+
+
+def test_agent_override_wraps_class_assignments():
+    """--agents beyond the experiment's natural fleet must wrap mode/class
+    assignments, not clamp out of range (jnp indexing silently clamps, so
+    agent 4 of mixed_gaussian used to get mode 7 twice instead of 0+1)."""
+    import numpy as np
+
+    from repro.data import synthetic
+    spec, _ = experiment_spec("mixed_gaussian", K=2, steps=4, agents=5)
+    modes = np.asarray(synthetic.mixed_gaussian_modes())
+    x4 = np.asarray(spec.agent_data[4]["x"])
+    nearest = np.linalg.norm(x4[:, None] - modes[None], axis=-1).argmin(1)
+    assert set(np.unique(nearest)) == {0, 1}  # wrapped, not clamped to 7
+    # image_acgan: randint bounds must stay valid when B > num classes
+    spec, _ = experiment_spec("image_acgan", K=2, steps=4, agents=12,
+                              batch_size=8)
+    labs = np.concatenate([np.asarray(d["y"]) for d in spec.agent_data])
+    assert labs.min() >= 0 and labs.max() < 10
+    # timeseries: climate zone stays in [0, 5)
+    spec, _ = experiment_spec("timeseries_cgan", K=2, steps=4, agents=7,
+                              batch_size=8)
+    for d in spec.agent_data:
+        y = np.asarray(d["y"])
+        assert y.sum(axis=-1).min() == 1.0  # one-hot stays valid
+
+
+def test_run_experiment_with_overrides_and_evals():
+    fed, state, hist = run_experiment(
+        "toy_2d", K=2, steps=8, seed=0, batch_size=8, agents=2,
+        log_every=0, eval_every=2, data_mode="device")
+    assert fed.cfg.agent_grid == (1, 2)
+    assert len(hist) == 4
+
+
+def test_eval_every_with_arch_is_rejected():
+    """No eval suite exists for backbone smoke runs — the CLI must say so
+    instead of silently dropping the flag."""
+    import sys
+    from unittest import mock
+
+    import repro.launch.train as train_mod
+    argv = ["train", "--arch", "gemma3-4b", "--eval-every", "2"]
+    with mock.patch.object(sys, "argv", argv):
+        with pytest.raises(SystemExit):
+            train_mod.main()
 
 
 def test_runspec_builder_round_trip():
