@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint bench bench-dryrun bench-serve bench-rounds \
-        sweep docs-check quickstart serve-example strategies-parity
+        bench-comm sweep sweep-comm docs-check quickstart serve-example \
+        strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -17,7 +18,7 @@ test-fast:
 # the public entry points import (catches syntax + import drift cheaply).
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint, repro.run, repro.run.experiments, repro.data, repro.evals"
+	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint, repro.run, repro.run.experiments, repro.data, repro.evals, repro.comm, repro.kernels.qpack.ops"
 
 # Execute every runnable snippet in docs/*.md (the docs-drift gate).
 docs-check:
@@ -42,11 +43,25 @@ bench-serve:
 bench-rounds:
 	$(PY) benchmarks/run.py --only rounds --fast --json
 
+# Wire-byte accounting per strategy/codec + qpack pack/unpack throughput,
+# with machine-readable BENCH_comm.json artifact (byte-count shaped rows —
+# the CI host is a 2-core container, backbone steps/s would be noise).
+bench-comm:
+	$(PY) benchmarks/run.py --only comm --json
+
 # The paper's robustness-to-reduced-communication curve in one command
 # (FID stand-in vs K, FedGAN vs the per-step distributed baseline).
 sweep:
 	$(PY) -m repro.run.experiments --experiment toy_2d \
 	    --sweep K=1,5,20,50 --compare distributed --steps 1000
+
+# The K×codec communication surface: quality + measured bytes/round per
+# (K, codec) cell on mixed_gaussian (int8/int4 + error feedback vs
+# uncompressed) at the paper's full step budget — the numbers quoted in
+# docs/communication.md.  ~half an hour on a 2-core CPU box.
+sweep-comm:
+	$(PY) -m repro.run.experiments --experiment mixed_gaussian \
+	    --sweep K=5,20 --codecs none,int8,int4
 
 quickstart:
 	$(PY) examples/quickstart.py --K 20

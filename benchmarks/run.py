@@ -52,7 +52,7 @@ def main() -> None:
                            bench_images.bench_celeba_attributes(steps=100 if fast else 300)),
         "timeseries": lambda: (bench_timeseries.bench_household(steps=200 if fast else 600),
                                bench_timeseries.bench_ev(steps=200 if fast else 600)),
-        "comm": bench_comm.main,
+        "comm": lambda: bench_comm.main(fast=fast),
         "lemmas": bench_lemmas.main,
         "roofline": bench_roofline.main,
         "kernels": bench_kernels.main,

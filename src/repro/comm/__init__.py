@@ -1,0 +1,17 @@
+# Compressed-sync wire codecs: block-scaled int8/int4 quantization,
+# magnitude top-k sparsification, and chained combinations, with honest
+# per-leaf wire accounting (payload + scales + indices).  Strategies carry
+# the matching error-feedback residuals in the round state; see
+# docs/communication.md.
+from repro.comm.codecs import (
+    CODECS,
+    Codec,
+    IntQuant,
+    Sequential,
+    TopK,
+    codec_from_flags,
+    get_codec,
+)
+
+__all__ = ["CODECS", "Codec", "IntQuant", "Sequential", "TopK",
+           "codec_from_flags", "get_codec"]

@@ -1,0 +1,315 @@
+"""Composable wire codecs for compressed sync — the HOW-bytes-are-encoded
+axis of the strategy design space.
+
+A :class:`Codec` maps a float leaf to a wire representation and back:
+
+  ``encode(x, batch_ndims)``   -> (payload, meta) — payload is the array a
+                                  further codec may re-encode (top-k values
+                                  stay float; quantized codes are terminal),
+                                  meta is the side information (scales,
+                                  indices) that ships alongside
+  ``decode(payload, meta, like, batch_ndims)``
+                               -> reconstruction shaped like ``like``
+  ``roundtrip(x, batch_ndims)``-> decode(encode(x)) — the lossy wire image,
+                                  what the intermediary actually receives
+  ``wire_bytes(like)``         -> honest per-leaf wire size: final payload
+                                  PLUS every stage's meta (scales + indices
+                                  billed, not just payload)
+
+Leaves keep their leading ``batch_ndims`` dims (the (P, A) agent grid when
+called from ``repro.dist.collectives``) as batch: blocks, scales and top-k
+selections never span agents — an agent can only compress what it holds.
+
+All encode/decode paths are jit-traceable; the quantizers' bit-packing runs
+through the ``kernels/qpack`` Pallas kernels on TPU and their vectorized
+ref oracle elsewhere (see ``kernels/qpack/ops.py``).
+
+Error feedback lives one level up (``repro.core.strategies`` carries the
+per-agent and server-side residuals in the round state); the codecs
+themselves are stateless and deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qpack.ops import (dequantize_blocks, quantize_blocks,
+                                     roundtrip_blocks)
+
+
+def _like_n(like) -> int:
+    return int(math.prod(like.shape)) if like.shape else 1
+
+
+def _nbytes(like) -> int:
+    return _like_n(like) * jnp.dtype(like.dtype).itemsize
+
+
+class Codec:
+    """Base protocol.  ``chainable`` marks codecs whose payload is still a
+    float stream a further codec can re-encode (quantized codes are not)."""
+
+    name = "identity"
+    chainable = True
+
+    def validate(self):
+        pass
+
+    def encode(self, x, batch_ndims: int = 0):
+        raise NotImplementedError
+
+    def decode(self, payload, meta, like, batch_ndims: int = 0):
+        raise NotImplementedError
+
+    def roundtrip(self, x, batch_ndims: int = 0):
+        payload, meta = self.encode(x, batch_ndims)
+        like = jax.ShapeDtypeStruct(x.shape[batch_ndims:], x.dtype)
+        return self.decode(payload, meta, like, batch_ndims)
+
+    def payload_like(self, like):
+        """Per-leaf (no batch dims) shape/dtype of the encoded payload."""
+        raise NotImplementedError
+
+    def meta_wire_bytes(self, like) -> int:
+        """Wire bytes of this stage's side information for one leaf."""
+        raise NotImplementedError
+
+    def wire_bytes(self, like) -> int:
+        """Total per-leaf wire bytes: payload + all meta."""
+        return self.meta_wire_bytes(like) + _nbytes(self.payload_like(like))
+
+
+def _flat(x, batch_ndims):
+    lead = x.shape[:batch_ndims]
+    return x.reshape(lead + (-1,)), lead
+
+
+@dataclasses.dataclass(frozen=True)
+class IntQuant(Codec):
+    """Block-scaled symmetric integer quantization (int8 or packed int4).
+
+    Each ``block``-wide tile of the flattened leaf gets one f16 scale
+    (max-abs / qmax); codes are round-to-nearest, clipped to ±qmax.  Wire =
+    ``ceil(N·bits/8)`` payload bytes + 2 bytes per block for the scale —
+    3.94x (int8) / 7.5x (int4) under f32 at the default block.  Lossy:
+    combine with error feedback (the strategy default) for convergence.
+    """
+
+    bits: int = 8
+    block: int = 128
+    use_kernel: Any = None  # None -> Pallas kernel on TPU, ref elsewhere
+
+    chainable = False
+
+    @property
+    def name(self):
+        return f"int{self.bits}"
+
+    def validate(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"IntQuant bits must be 4 or 8, got {self.bits}")
+        if self.block < 2 or self.block % 2:
+            raise ValueError(f"IntQuant block must be even and >= 2, "
+                             f"got {self.block}")
+
+    def encode(self, x, batch_ndims: int = 0):
+        flat, _ = _flat(x, batch_ndims)
+        payload, scales = quantize_blocks(flat, bits=self.bits,
+                                          block=self.block,
+                                          use_kernel=self.use_kernel)
+        return payload, {"scale": scales}
+
+    def decode(self, payload, meta, like, batch_ndims: int = 0):
+        n = _like_n(like)
+        out = dequantize_blocks(payload, meta["scale"], n=n, bits=self.bits,
+                                block=self.block, use_kernel=self.use_kernel)
+        lead = payload.shape[:batch_ndims]
+        return out.reshape(lead + like.shape).astype(like.dtype)
+
+    def roundtrip(self, x, batch_ndims: int = 0):
+        # the wire image without the int4 nibble pack/unpack — pack4∘unpack4
+        # is a bit-exact identity, so the sync hot path skips it
+        flat, _ = _flat(x, batch_ndims)
+        out = roundtrip_blocks(flat, bits=self.bits, block=self.block,
+                               use_kernel=self.use_kernel)
+        return out.reshape(x.shape).astype(x.dtype)
+
+    def payload_like(self, like):
+        # the wire ships the unpadded stream; padding to the block multiple
+        # is a kernel-tiling artifact
+        n = _like_n(like)
+        return jax.ShapeDtypeStruct(((n * self.bits + 7) // 8,), jnp.int8)
+
+    def meta_wire_bytes(self, like) -> int:
+        n_blocks = -(-_like_n(like) // self.block)
+        return n_blocks * jnp.dtype(jnp.float16).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Codec):
+    """Magnitude top-k sparsification: keep the ``fraction`` largest-|x|
+    entries of each (per-agent) leaf, zero the rest.  Wire = k values at
+    the leaf dtype + k int32 indices — the indices are billed.  The values
+    payload stays float, so a quantizer can chain behind it
+    (``Sequential((TopK(...), IntQuant(...)))``)."""
+
+    fraction: float = 0.1
+
+    name = "topk"
+
+    def validate(self):
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"TopK fraction must be in (0, 1], "
+                             f"got {self.fraction}")
+
+    def _k(self, n: int) -> int:
+        return max(1, min(n, math.ceil(self.fraction * n)))
+
+    def encode(self, x, batch_ndims: int = 0):
+        flat, _ = _flat(x, batch_ndims)
+        k = self._k(flat.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = jnp.take_along_axis(flat, idx, axis=-1)
+        return vals, {"idx": idx.astype(jnp.int32)}
+
+    def decode(self, payload, meta, like, batch_ndims: int = 0):
+        n = _like_n(like)
+        lead = payload.shape[:batch_ndims]
+        rows = int(math.prod(lead)) if lead else 1
+        v = payload.reshape(rows, -1)
+        i = meta["idx"].reshape(rows, -1)
+        out = jnp.zeros((rows, n), payload.dtype)
+        out = out.at[jnp.arange(rows)[:, None], i].set(v)
+        return out.reshape(lead + like.shape).astype(like.dtype)
+
+    def payload_like(self, like):
+        return jax.ShapeDtypeStruct((self._k(_like_n(like)),), like.dtype)
+
+    def meta_wire_bytes(self, like) -> int:
+        return self._k(_like_n(like)) * jnp.dtype(jnp.int32).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class Sequential(Codec):
+    """Chain codecs left to right: each stage re-encodes the previous
+    stage's payload (e.g. sparsify, then quantize the survivors).  Wire =
+    the final payload + every stage's meta."""
+
+    codecs: tuple = ()
+
+    @property
+    def name(self):
+        return "+".join(c.name for c in self.codecs)
+
+    @property
+    def chainable(self):
+        return self.codecs[-1].chainable if self.codecs else True
+
+    def validate(self):
+        if not self.codecs:
+            raise ValueError("Sequential needs at least one codec")
+        for c in self.codecs:
+            c.validate()
+        for c in self.codecs[:-1]:
+            if not c.chainable:
+                raise ValueError(
+                    f"{c.name} produces integer codes; it can only be the "
+                    f"last stage of a chain (got {self.name})")
+
+    def _likes(self, like):
+        """Per-stage input likes: like -> c0.payload_like -> c1... ."""
+        likes = [like]
+        for c in self.codecs[:-1]:
+            likes.append(c.payload_like(likes[-1]))
+        return likes
+
+    def encode(self, x, batch_ndims: int = 0):
+        payload, metas = x, []
+        for c in self.codecs:
+            payload, m = c.encode(payload, batch_ndims)
+            metas.append(m)
+        return payload, {"stages": tuple(metas)}
+
+    def decode(self, payload, meta, like, batch_ndims: int = 0):
+        likes = self._likes(like)
+        for c, m, lk in zip(reversed(self.codecs),
+                            reversed(meta["stages"]), reversed(likes)):
+            payload = c.decode(payload, m, lk, batch_ndims)
+        return payload
+
+    def payload_like(self, like):
+        return self.codecs[-1].payload_like(self._likes(like)[-1])
+
+    def meta_wire_bytes(self, like) -> int:
+        return sum(c.meta_wire_bytes(lk)
+                   for c, lk in zip(self.codecs, self._likes(like)))
+
+
+# ---------------------------------------------------------------------------
+# Registry + CLI resolution
+# ---------------------------------------------------------------------------
+
+CODECS = {
+    "int8": lambda: IntQuant(bits=8),
+    "int4": lambda: IntQuant(bits=4),
+    "topk": lambda: TopK(),
+}
+
+
+def _stages(spec: str, *, bits: int = 0, fraction: float = 0.0,
+            block: int = 0) -> list:
+    """Spec string -> list of codec stages with knob overrides applied."""
+    stages = []
+    for part in [p for p in spec.split("+") if p]:
+        try:
+            c = CODECS[part]()
+        except KeyError:
+            raise ValueError(f"unknown codec {part!r}; "
+                             f"known: {sorted(CODECS)}") from None
+        if isinstance(c, IntQuant):
+            c = dataclasses.replace(c, bits=bits or c.bits,
+                                    block=block or c.block)
+        if isinstance(c, TopK) and fraction:
+            c = dataclasses.replace(c, fraction=fraction)
+        stages.append(c)
+    return stages
+
+
+def _build(stages, spec):
+    if not stages:
+        raise ValueError(f"empty codec spec {spec!r}")
+    codec = stages[0] if len(stages) == 1 else Sequential(tuple(stages))
+    codec.validate()
+    return codec
+
+
+def get_codec(spec: str, *, bits: int = 0, fraction: float = 0.0,
+              block: int = 0) -> Codec:
+    """Resolve a codec spec string — a registry name or a ``+``-chain like
+    ``"topk+int8"`` — with optional knob overrides applied to the matching
+    stage(s)."""
+    return _build(_stages(spec, bits=bits, fraction=fraction, block=block),
+                  spec)
+
+
+def codec_from_flags(spec: str = "", bits: int = 0,
+                     topk: float = 0.0) -> Codec | None:
+    """CLI flags -> codec.  ``--codec`` names the spec; ``--codec-bits``
+    retunes (or appends) the quantizer stage; ``--topk`` retunes (or
+    prepends) the sparsifier — so ``--codec int8 --topk 0.25`` is the
+    canonical sparsify-then-quantize chain.  Returns None when no codec
+    flag was given."""
+    if not spec and not bits and not topk:
+        return None
+    stages = _stages(spec, bits=bits, fraction=topk)
+    if spec and not stages:
+        raise ValueError(f"empty codec spec {spec!r}")
+    if topk and not any(isinstance(c, TopK) for c in stages):
+        stages.insert(0, TopK(fraction=topk))
+    if bits and not any(isinstance(c, IntQuant) for c in stages):
+        stages.append(IntQuant(bits=bits))
+    return _build(stages, spec)

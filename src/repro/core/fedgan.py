@@ -138,14 +138,19 @@ class FedGAN:
         return w / jnp.sum(w)
 
     def init_state(self, rng) -> dict:
-        """All agents start from the same (w_hat, theta_hat) — Algorithm 1."""
+        """All agents start from the same (w_hat, theta_hat) — Algorithm 1.
+        Strategies may carry extra entries across rounds (e.g. the
+        error-feedback residuals of a compressed sync) — those are merged
+        here so every state-construction path gets them."""
         P, A = self.cfg.agent_grid
         params = self.task.init(rng)
         opt_g = self.opt_g.init(params["gen"])
         opt_d = self.opt_d.init(params["disc"])
         stacked = tmap(lambda x: jnp.broadcast_to(x, (P, A) + x.shape),
                        {"params": params, "opt_g": opt_g, "opt_d": opt_d})
-        return {**stacked, "step": jnp.zeros((), jnp.int32)}
+        state = {**stacked, "step": jnp.zeros((), jnp.int32)}
+        state.update(self.cfg.resolve_strategy().init_round_state(self, state))
+        return state
 
     # ------------------------------------------------------------------
     # averaging primitives (legacy helpers; strategies call collectives
@@ -224,6 +229,7 @@ class FedGAN:
             state["params"]["gen"], gg, state["opt_g"])
 
         new_state = {
+            **state,  # strategy-carried entries (e.g. EF residuals) ride along
             "params": {"gen": new_gen, "disc": new_disc},
             "opt_g": new_opt_g, "opt_d": new_opt_d,
             "step": n + 1,
@@ -306,7 +312,9 @@ class FedGAN:
         M_bytes = collectives.tree_bytes(params)
         K = self.cfg.sync_interval
         per_round = {"fedgan": 2 * M_bytes, "distributed": 2 * M_bytes * K}
+        codec = getattr(strat, "codec", None)
         return {"param_bytes_M": M_bytes, "per_agent_per_round": per_round,
                 "ratio": K, "strategy": strat.name,
+                "codec": codec.name if codec is not None else None,
                 "strategy_bytes_per_round": strat.bytes_per_round(
                     self.cfg, params, opt=self.agent_opt_state(state))}

@@ -12,7 +12,12 @@ related work explores along three independent axes:
     the Adam moments too;
   * HOW — dataset-size-weighted averaging over the agent grid, optionally
     cast to a wire dtype (compressed sync) or restricted to a per-round
-    participation subsample (FedAvg client sampling).
+    participation subsample (FedAvg client sampling);
+  * how bytes are ENCODED — a ``repro.comm`` codec (block-scaled int8/int4
+    quantization, magnitude top-k sparsification, chains of both) applied
+    to both directions of the sync, with per-agent uplink and shared
+    downlink error-feedback residuals carried in the round state so the
+    lossy wire still converges (see docs/communication.md).
 
 A :class:`SyncStrategy` owns all three plus its own §3.2 wire-byte
 accounting (:meth:`SyncStrategy.bytes_per_round`).  Strategies compose with
@@ -25,6 +30,9 @@ audit (``repro.launch.hlo_analysis``).
 Strategy hooks called from ``FedGAN.round`` / ``FedGAN._step``:
 
   ``validate(cfg)``              static config check (raise ValueError)
+  ``init_round_state(fed, st)``  extra state entries the strategy carries
+                                 across rounds (e.g. error-feedback
+                                 residuals); merged by ``init_state``
   ``intra_interval``             int attr; nonzero splits the K-scan into
                                  segments of this length (must divide K)
   ``grad_hook(fed, gd, gg, st)`` per-step gradient transform (runs inside
@@ -61,10 +69,18 @@ def _select(mask, new, old):
                                a, x), new, old)
 
 
-def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None):
+def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
+            codec=None, error_feedback=True):
     """The eq. (2)+(3) aggregation restricted to ``subtrees`` (and optionally
     a participation ``mask``): weighted average over (P, A), broadcast back.
-    Non-participating agents keep their local values."""
+    Non-participating agents keep their local values (including their
+    error-feedback residuals — they never hit the wire this round).
+
+    With ``codec`` the sync runs through ``collectives.coded_sync``: both
+    wire directions move the compressed representation, and when
+    ``error_feedback`` the per-agent uplink residuals (``state["ef"]``) and
+    the shared downlink residual (``state["ef_down"]``) are updated in
+    place of being discarded."""
     w = fed._w()
     if mask is not None:
         w = w * mask
@@ -76,12 +92,39 @@ def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None):
 
     new = dict(state)
     params = dict(state["params"])
-    for k in subtrees:
-        params[k] = avg(state["params"][k])
+    if codec is None:
+        for k in subtrees:
+            params[k] = avg(state["params"][k])
+    else:
+        use_ef = error_feedback and "ef" in state
+        ef = dict(state["ef"]) if use_ef else None
+        ef_down = dict(state["ef_down"]) if use_ef else None
+        for k in subtrees:
+            synced, e2, ed2 = collectives.coded_sync(
+                state["params"][k], w, codec,
+                ef=ef[k] if use_ef else None,
+                ef_down=ef_down[k] if use_ef else None)
+            if mask is not None:
+                synced = _select(mask, synced, state["params"][k])
+                if use_ef:
+                    e2 = _select(mask, e2, ef[k])
+            params[k] = synced
+            if use_ef:
+                ef[k], ef_down[k] = e2, ed2
+        if use_ef:
+            new["ef"], new["ef_down"] = ef, ef_down
     new["params"] = params
     if average_opt_state:
         for k in subtrees:
-            new[_OPT_KEY[k]] = avg(state[_OPT_KEY[k]])
+            if codec is None:
+                new[_OPT_KEY[k]] = avg(state[_OPT_KEY[k]])
+            else:
+                # optimizer moments ride the coded wire too, but without
+                # residuals — the moments are re-estimated every step anyway
+                synced, _, _ = collectives.coded_sync(state[_OPT_KEY[k]], w,
+                                                      codec)
+                new[_OPT_KEY[k]] = (synced if mask is None else
+                                    _select(mask, synced, state[_OPT_KEY[k]]))
     return new
 
 
@@ -93,6 +136,11 @@ class SyncStrategy:
 
     def validate(self, cfg):
         pass
+
+    def init_round_state(self, fed, state) -> dict:
+        """Extra entries the strategy carries in the round state (merged by
+        ``FedGAN.init_state``); base strategies carry nothing."""
+        return {}
 
     def grad_hook(self, fed, grad_disc, grad_gen, state):
         return grad_disc, grad_gen
@@ -120,11 +168,23 @@ class FedAvgSync(SyncStrategy):
     ``sync_dtype`` casts leaves to a wire dtype for the average (compressed
     sync); ``average_opt_state`` additionally FedAvgs the optimizer moments
     of the synced subtrees.
+
+    ``codec`` (a ``repro.comm.Codec``) replaces the dtype cast with a real
+    wire encoding — quantized and/or sparsified payloads in both sync
+    directions.  Lossy codecs converge through ``error_feedback``: each
+    agent carries an uplink residual (``state["ef"]``, per-agent) and the
+    intermediary a downlink residual (``state["ef_down"]``, shared), both
+    added back before the next encode so quantization error accumulates
+    into the stream instead of being lost.  ``codec`` and ``sync_dtype``
+    are mutually exclusive (no double compression — chain codecs with
+    ``repro.comm.Sequential`` instead).
     """
 
     sync_dtype: Any = None
     average_opt_state: bool = False
     subtrees: tuple = ("gen", "disc")
+    codec: Any = None
+    error_feedback: bool = True
     name = "fedgan"
 
     def validate(self, cfg):
@@ -132,6 +192,25 @@ class FedAvgSync(SyncStrategy):
         if bad or not self.subtrees:
             raise ValueError(f"subtrees must be a non-empty subset of "
                              f"{tuple(_OPT_KEY)}, got {self.subtrees}")
+        if self.codec is not None:
+            self.codec.validate()
+            if self.sync_dtype is not None:
+                raise ValueError(
+                    "codec= and sync_dtype= are both wire compressions; "
+                    "pick one (chain codecs with repro.comm.Sequential "
+                    "instead of stacking a dtype cast on top)")
+
+    def init_round_state(self, fed, state) -> dict:
+        if self.codec is None or not self.error_feedback:
+            return {}
+        zeros = lambda t: tmap(jnp.zeros_like, t)
+        return {
+            # per-agent uplink residuals, agent-stacked like the params
+            "ef": {k: zeros(state["params"][k]) for k in self.subtrees},
+            # the intermediary's downlink residual — one shared copy
+            "ef_down": {k: tmap(lambda x: jnp.zeros(x.shape[2:], x.dtype),
+                                state["params"][k]) for k in self.subtrees},
+        }
 
     def participation_mask(self, fed, state):
         """(P, A) bool mask of agents taking part in this round's sync, or
@@ -141,16 +220,19 @@ class FedAvgSync(SyncStrategy):
     def round_sync(self, fed, state):
         return _fedavg(fed, state, subtrees=self.subtrees,
                        average_opt_state=self.average_opt_state,
-                       sync_dtype=self.sync_dtype,
+                       sync_dtype=self.sync_dtype, codec=self.codec,
+                       error_feedback=self.error_feedback,
                        mask=self.participation_mask(fed, state))
 
     def bytes_per_round(self, cfg, params, opt=None) -> int:
         wire = sum(collectives.sync_bytes(params[k],
-                                          sync_dtype=self.sync_dtype)
+                                          sync_dtype=self.sync_dtype,
+                                          codec=self.codec)
                    for k in self.subtrees)
         if self.average_opt_state and opt is not None:
             wire += sum(collectives.sync_bytes(opt[_OPT_KEY[k]],
-                                               sync_dtype=self.sync_dtype)
+                                               sync_dtype=self.sync_dtype,
+                                               codec=self.codec)
                         for k in self.subtrees if _OPT_KEY[k] in opt)
         return 2 * wire  # send + receive, once per round
 

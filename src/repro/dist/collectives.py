@@ -12,6 +12,13 @@ experiments) the same einsums are just math.
 average and back after, so the all-reduce moves 2-byte (or fp8) words while
 the master copy stays full precision — the same width contract the fedavg
 Pallas kernel (repro.kernels.fedavg) uses for its on-chip reduction.
+
+``codec`` goes further (:func:`coded_sync`): each agent's leaf is run
+through a ``repro.comm`` codec, the decode→weighted-average happens at the
+reduce, and the average is re-encoded for the broadcast — both directions
+of the agent-grid all-reduce move the *compressed* representation, with
+optional error-feedback residuals (per-agent uplink + shared downlink)
+threaded through so the lossy wire still converges.
 """
 from __future__ import annotations
 
@@ -64,17 +71,64 @@ def average_intra_pod(tree, weights):
     return tmap(avg, tree)
 
 
+def coded_sync(tree, weights, codec, *, ef=None, ef_down=None):
+    """The full compressed intermediary sync for one subtree.
+
+    Per inexact leaf: the agent adds its carried residual (``ef``), encodes
+    through ``codec`` (the uplink wire image — blocks/top-k never span
+    agents), the reduce decodes and weighted-averages over (P, A), the
+    server adds its own residual (``ef_down``), re-encodes the average (the
+    downlink wire image) and broadcasts it back.  Integer leaves pass
+    through untouched (they are identical across lockstep agents).
+
+    Returns ``(synced, new_ef, new_ef_down)`` — the residual trees are None
+    when the corresponding input residuals are None (no error feedback).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    e_leaves = (jax.tree_util.tree_leaves(ef) if ef is not None
+                else [None] * len(leaves))
+    ed_leaves = (jax.tree_util.tree_leaves(ef_down) if ef_down is not None
+                 else [None] * len(leaves))
+    outs, new_e, new_ed = [], [], []
+    for x, e, ed in zip(leaves, e_leaves, ed_leaves):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            outs.append(x)
+            new_e.append(e)
+            new_ed.append(ed)
+            continue
+        y = x + e if e is not None else x
+        q = codec.roundtrip(y, batch_ndims=2)           # uplink wire image
+        m = jnp.einsum("pa,pa...->...", weights.astype(q.dtype), q)
+        yd = m + ed if ed is not None else m
+        qd = codec.roundtrip(yd)                        # downlink wire image
+        outs.append(jnp.broadcast_to(qd.astype(x.dtype), x.shape))
+        new_e.append(y - q if e is not None else None)
+        new_ed.append(yd - qd if ed is not None else None)
+    unflat = jax.tree_util.tree_unflatten
+    return (unflat(treedef, outs),
+            unflat(treedef, new_e) if ef is not None else None,
+            unflat(treedef, new_ed) if ef_down is not None else None)
+
+
 def tree_bytes(tree) -> int:
     """Total bytes of the array leaves (the 'M' of the §3.2 accounting)."""
     return sum(int(l.size) * l.dtype.itemsize
                for l in jax.tree_util.tree_leaves(tree))
 
 
-def sync_bytes(tree, *, sync_dtype=None) -> int:
+def sync_bytes(tree, *, sync_dtype=None, codec=None) -> int:
     """Bytes one agent moves per direction in one parameter sync — i.e. the
-    wire size of ``tree`` after the optional ``sync_dtype`` compression."""
+    wire size of ``tree`` after the optional ``sync_dtype`` cast or
+    ``codec`` encoding (payload + scales + indices; integer leaves pass
+    through uncompressed).  ``tree`` leaves may be ShapeDtypeStructs."""
+    if sync_dtype is not None and codec is not None:
+        raise ValueError("sync_dtype and codec are both wire compressions; "
+                         "pick one")
     total = 0
     for l in jax.tree_util.tree_leaves(tree):
+        if codec is not None and jnp.issubdtype(l.dtype, jnp.inexact):
+            total += codec.wire_bytes(l)
+            continue
         itemsize = (jnp.dtype(sync_dtype).itemsize if sync_dtype is not None
                     else l.dtype.itemsize)
         total += int(l.size) * itemsize

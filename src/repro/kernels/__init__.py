@@ -1,5 +1,7 @@
 # Pallas TPU kernels for the paper's compute hot spots, each validated in
 # interpret mode against its pure-jnp ref.py oracle:
 #   fedavg/          — fused weighted parameter average (the sync reduction)
+#   qpack/           — block-scaled int8/int4 quantize + nibble pack/unpack
+#                      (the repro.comm compressed-sync wire transform)
 #   flash_attention/ — online-softmax GQA attention, causal + sliding window
 #   ssd_scan/        — Mamba2 SSD chunked scan (intra-chunk + recurrent state)

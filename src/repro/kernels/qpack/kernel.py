@@ -1,0 +1,134 @@
+"""Pallas TPU kernels for the comm codecs' bit-packing: block-scaled
+int8/int4 quantize (pack) and dequantize (unpack).
+
+This is the wire transform of a compressed sync (repro.comm): before the
+agent-axis all-reduce each agent's flat parameter stream is cut into
+``block``-wide tiles, every tile gets one f16 scale (max-abs / qmax, the
+value that actually ships, so encode and decode agree bit-for-bit), and the
+payload is rounded to ``bits``-wide signed codes — two codes per byte for
+int4.  The grid walks the flat stream exactly like ``kernels/fedavg``:
+(R, block) tiles resident in VMEM so the quantize stream overlaps the HBM
+loads, with the (R, 1) scale column written alongside.
+
+Zero-blocks: a tile whose max-abs underflows f16 gets scale 0 on the wire
+and decodes to exact zeros — the decode-side ``where`` keeps the division
+well-defined without inventing a floor the wire couldn't represent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wire_scale(amax, qmax, scale_dtype):
+    """The f16 scale that ships, and the f32 value both ends divide by.
+    Clamped to the scale dtype's finite range: an overflowing block clips
+    hard (error feedback absorbs it) instead of shipping inf and decoding
+    0 * inf = NaN."""
+    fmax = float(jnp.finfo(scale_dtype).max)
+    s_wire = jnp.minimum(amax / qmax, fmax).astype(scale_dtype)
+    s_dec = jnp.where(s_wire > 0, s_wire.astype(jnp.float32), 1.0)
+    return s_wire, s_dec
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, qmax, scale_dtype):
+    # x_ref: (R, block) source tile; q_ref: (R, block) int8 codes;
+    # s_ref: (R, 1) wire-dtype scales
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    s_wire, s_dec = _wire_scale(amax, qmax, scale_dtype)
+    q = jnp.clip(jnp.round(x / s_dec), -qmax, qmax)
+    q_ref[...] = q.astype(q_ref.dtype)
+    s_ref[...] = s_wire
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    s = s_ref[...].astype(jnp.float32)
+    o_ref[...] = q_ref[...].astype(jnp.float32) * jnp.where(s > 0, s, 1.0)
+
+
+def _pack4_kernel(q_ref, p_ref):
+    # q_ref: (R, block) int8 codes in [-7, 7]; p_ref: (R, block//2) uint8 —
+    # consecutive pairs packed low-nibble-first
+    q = q_ref[...].astype(jnp.uint8) & 0xF
+    pairs = q.reshape(q.shape[0], -1, 2)
+    p_ref[...] = pairs[:, :, 0] | (pairs[:, :, 1] << 4)
+
+
+def _unpack4_kernel(p_ref, q_ref):
+    p = p_ref[...]
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend the 4-bit two's complement nibbles
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    q_ref[...] = jnp.stack([lo, hi], axis=-1).reshape(q_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "block", "scale_dtype",
+                                             "interpret"))
+def quant_flat(x: jax.Array, *, qmax: int, block: int = 128,
+               scale_dtype=jnp.float16, interpret: bool = True):
+    """x: (R, N) with N a multiple of ``block``.  Returns (codes int8 (R, N),
+    scales ``scale_dtype`` (R, N // block))."""
+    R, N = x.shape
+    n_blocks = N // block
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax, scale_dtype=scale_dtype),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((R, block), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((R, block), lambda i: (0, i)),
+                   pl.BlockSpec((R, 1), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((R, N), jnp.int8),
+                   jax.ShapeDtypeStruct((R, n_blocks), scale_dtype)],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequant_flat(q: jax.Array, scales: jax.Array, *, block: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """codes (R, N) + scales (R, N // block) -> f32 (R, N)."""
+    R, N = q.shape
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(N // block,),
+        in_specs=[pl.BlockSpec((R, block), lambda i: (0, i)),
+                  pl.BlockSpec((R, 1), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((R, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((R, N), jnp.float32),
+        interpret=interpret,
+    )(q, scales)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pack4_flat(q: jax.Array, *, block: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """int8 codes (R, N) in [-7, 7] -> packed uint8 nibbles (R, N // 2)."""
+    R, N = q.shape
+    return pl.pallas_call(
+        _pack4_kernel,
+        grid=(N // block,),
+        in_specs=[pl.BlockSpec((R, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((R, block // 2), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((R, N // 2), jnp.uint8),
+        interpret=interpret,
+    )(q)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def unpack4_flat(p: jax.Array, *, block: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    """packed uint8 nibbles (R, M) -> int8 codes (R, 2 M)."""
+    R, M = p.shape
+    return pl.pallas_call(
+        _unpack4_kernel,
+        grid=(M // (block // 2),),
+        in_specs=[pl.BlockSpec((R, block // 2), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((R, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((R, 2 * M), jnp.int8),
+        interpret=interpret,
+    )(p)

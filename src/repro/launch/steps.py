@@ -244,6 +244,18 @@ def build_train_round(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
         "opt_d": plan.specs(state_sds["opt_d"], mesh),
         "step": P(),
     }
+    # strategy-carried entries (e.g. repro.comm error feedback): anything
+    # agent-stacked — every leaf leading with the (P, A) grid, like the EF
+    # uplink residuals — shards exactly like the params; shared per-leaf
+    # state (the downlink residual) has no agent lead and is replicated
+    for k, sds in state_sds.items():
+        if k in state_specs:
+            continue
+        leaves = jax.tree_util.tree_leaves(sds)
+        stacked = bool(leaves) and all(l.shape[:2] == (Pn, A)
+                                       for l in leaves)
+        state_specs[k] = (plan.specs(sds, mesh) if stacked
+                          else tmap(lambda _: P(), sds))
 
     batch = {"tokens": _token_sds((K, Pn, A, per_agent, shape.seq_len))}
     batch_specs = {"tokens": filter_spec(

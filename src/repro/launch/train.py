@@ -14,6 +14,8 @@ Aggregation is selected with --strategy (see repro.core.strategies), e.g.:
       --strategy hierarchical --intra-interval 5
   PYTHONPATH=src python -m repro.launch.train --experiment swiss_roll \
       --strategy partial_sharing --sync-dtype bf16
+  PYTHONPATH=src python -m repro.launch.train --experiment mixed_gaussian \
+      --codec int8          # quantized sync wire + error feedback
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-2.7b --steps 40
 
 The legacy --mode flag still works (it resolves through the deprecation
@@ -370,6 +372,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="hierarchical: steps between intra-pod averages")
     ap.add_argument("--sync-dtype", default="", choices=sorted(_SYNC_DTYPES),
                     help="wire dtype for compressed sync (e.g. bf16)")
+    ap.add_argument("--codec", default="",
+                    help="wire codec spec for compressed sync (repro.comm): "
+                         "int8 | int4 | topk | chains like topk+int8")
+    ap.add_argument("--codec-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="quantizer bits; retunes (or appends) the codec's "
+                         "quantizer stage")
+    ap.add_argument("--topk", type=float, default=0.0,
+                    help="top-k sparsification fraction; retunes (or "
+                         "prepends) the codec's sparsifier stage")
     ap.add_argument("--average-opt-state", action="store_true",
                     help="FedAvg the optimizer moments along with the params")
     ap.add_argument("--participation", type=float, default=0.0,
@@ -401,13 +412,25 @@ def strategy_from_args(args) -> strategies.SyncStrategy | None:
     """CLI flags -> SyncStrategy (None keeps the library default).  A knob
     that the chosen strategy does not declare is an error, not a silent
     no-op (mirroring FedGANConfig.resolve_strategy's conflict check)."""
+    from repro.comm import codec_from_flags
     sync_dtype = _SYNC_DTYPES[args.sync_dtype]
-    if args.strategy:
-        cls = strategies.STRATEGIES[args.strategy]
+    codec = codec_from_flags(args.codec, bits=args.codec_bits,
+                             topk=args.topk)
+    if codec is not None and args.sync_dtype:
+        raise ValueError(
+            "--codec and --sync-dtype are both wire compressions; pick one "
+            "(chain codecs via --codec a+b instead)")
+    if args.strategy or (codec is not None and not args.mode):
+        # a bare --codec implies the FedAvgSync base strategy, through the
+        # same knob validation (no silent drops of e.g. --participation)
+        cls = (strategies.STRATEGIES[args.strategy] if args.strategy
+               else strategies.FedAvgSync)
         fields = {f.name for f in dataclasses.fields(cls)}
         requested = {}
         if args.sync_dtype:
             requested["sync_dtype"] = sync_dtype
+        if codec is not None:
+            requested["codec"] = codec
         if args.average_opt_state:
             requested["average_opt_state"] = True
         if args.intra_interval:
@@ -420,11 +443,15 @@ def strategy_from_args(args) -> strategies.SyncStrategy | None:
             requested["sync_every"] = args.sync_every
         stray = sorted(set(requested) - fields)
         if stray:
+            name = args.strategy or "fedgan (implied by --codec)"
             raise ValueError(
-                f"--strategy {args.strategy} does not accept {stray} "
+                f"--strategy {name} does not accept {stray} "
                 f"(its knobs: {sorted(fields)})")
-        return strategies.get_strategy(args.strategy, **requested)
+        return cls(**requested)
     if args.mode:
+        if codec is not None:
+            raise ValueError("--codec requires --strategy (the legacy "
+                             "--mode strings predate the codec axis)")
         return strategies.strategy_from_mode(
             args.mode, intra_interval=args.intra_interval,
             sync_dtype=sync_dtype, average_opt_state=args.average_opt_state)

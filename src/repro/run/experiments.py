@@ -1,4 +1,5 @@
-"""K-sweep experiment runner — the paper's Fig. 1–4 driver.
+"""K-sweep experiment runner — the paper's Fig. 1–4 driver, extended to a
+K×codec communication surface.
 
 Reproduces the robustness-to-reduced-communication curves (metric vs sync
 interval K, FedGAN vs the per-step distributed baseline) end to end in one
@@ -7,12 +8,19 @@ command, on the device-resident runtime:
     PYTHONPATH=src python -m repro.run.experiments \\
         --experiment mixed_gaussian --sweep K=5,20,100 --compare distributed
 
+Adding ``--codecs none,int8,int4`` grows the grid along the wire-encoding
+axis (``repro.comm`` codecs with error feedback, on the ``fedgan`` base
+strategy): the summary then shows metric AND measured bytes/round per
+(K, codec) cell — the paper's K-robustness claim extended to a full
+K×compression surface (see docs/communication.md).
+
 Every run streams a structured JSONL history (one line per round + one
 ``"final"`` line with the ``repro.evals`` scores) into
 ``<out_dir>/sweep_<experiment>.jsonl`` and the command ends with a summary
 table of the FID stand-in (and the suite's extra metrics) vs K — the
 paper's qualitative claim is that the FedGAN column barely moves as K
-grows while the wire bytes drop by K×.
+grows while the wire bytes drop by K× (and by another codec-factor along
+the compression axis).
 """
 from __future__ import annotations
 
@@ -28,7 +36,7 @@ from repro.run.evals import final_fd
 
 @dataclasses.dataclass
 class SweepCell:
-    """One (K, strategy) run of the sweep."""
+    """One (K, strategy, codec) run of the sweep."""
 
     experiment: str
     K: int
@@ -37,10 +45,17 @@ class SweepCell:
     evals: list
     final: dict
     timings: dict
+    codec: str = "none"
+    bytes_per_round: int = 0
+
+    @property
+    def label(self) -> str:
+        return (self.strategy if self.codec == "none"
+                else f"{self.strategy}+{self.codec}")
 
     def rows(self):
         base = {"experiment": self.experiment, "K": self.K,
-                "strategy": self.strategy}
+                "strategy": self.strategy, "codec": self.codec}
         for r, m in enumerate(self.history):
             yield {**base, "round": r, "step": (r + 1) * self.K,
                    **{k: v for k, v in m.items()
@@ -48,24 +63,31 @@ class SweepCell:
         for e in self.evals:
             yield {**base, "eval": True, **e}
         yield {**base, "final": True, **self.final,
+               "bytes_per_round": self.bytes_per_round,
                "steps_per_s": round(self.timings["steps_per_s"], 2)}
 
 
-def _strategy_for(name: str):
+def _strategy_for(name: str, codec: str = "none"):
     """Sweep-cell strategy: 'fedgan' keeps the library default (FedAvgSync),
-    anything else resolves through the registry."""
+    anything else resolves through the registry; a codec spec wraps the
+    fedgan base in a compressed-sync FedAvgSync (error feedback on)."""
+    if codec != "none":
+        from repro.comm import get_codec
+        return sync_strategies.FedAvgSync(codec=get_codec(codec))
     return None if name == "fedgan" else sync_strategies.get_strategy(name)
 
 
 def run_sweep(experiment: str, Ks: Sequence[int], *,
               strategy_names: Sequence[str] = ("fedgan",),
+              codec_names: Sequence[str] = ("none",),
               steps: int | None = None, seed: int = 0, out_dir: str = ".",
               eval_every: int = 0, eval_n: int = 2048,
               rounds_per_chunk: int = 8, verbose: bool = True
               ) -> list[SweepCell]:
-    """Run the (K × strategy) grid on the device-resident runtime and
-    persist JSONL histories.  Returns the grid cells for programmatic use
-    (tests, benchmarks)."""
+    """Run the (K × strategy × codec) grid on the device-resident runtime
+    and persist JSONL histories.  Codecs apply to the ``fedgan`` base
+    strategy only (the comparison strategies run uncompressed).  Returns
+    the grid cells for programmatic use (tests, benchmarks)."""
     from repro.launch.train import experiment_spec
     cells = []
     os.makedirs(out_dir, exist_ok=True)
@@ -73,23 +95,30 @@ def run_sweep(experiment: str, Ks: Sequence[int], *,
     with open(path, "w") as f:
         for K in Ks:
             for sname in strategy_names:
-                spec, suite = experiment_spec(
-                    experiment, K=K, steps=steps, seed=seed,
-                    strategy=_strategy_for(sname), log_every=0,
-                    eval_every=eval_every, data_mode="device",
-                    rounds_per_chunk=rounds_per_chunk)
-                if verbose:
-                    print(f"[sweep] {experiment} K={K} strategy={sname} "
-                          f"({spec.n_rounds} rounds x {K} steps)", flush=True)
-                res = spec.run_result()
-                final = final_fd(suite, res.fed, res.state, seed=seed,
-                                 n=eval_n)
-                cell = SweepCell(experiment, K, sname, res.history,
-                                 res.evals, final, res.timings)
-                for row in cell.rows():
-                    f.write(json.dumps(row) + "\n")
-                f.flush()
-                cells.append(cell)
+                specs_c = codec_names if sname == "fedgan" else ("none",)
+                for cname in specs_c:
+                    spec, suite = experiment_spec(
+                        experiment, K=K, steps=steps, seed=seed,
+                        strategy=_strategy_for(sname, cname), log_every=0,
+                        eval_every=eval_every, data_mode="device",
+                        rounds_per_chunk=rounds_per_chunk)
+                    if verbose:
+                        print(f"[sweep] {experiment} K={K} strategy={sname} "
+                              f"codec={cname} ({spec.n_rounds} rounds x "
+                              f"{K} steps)", flush=True)
+                    res = spec.run_result()
+                    final = final_fd(suite, res.fed, res.state, seed=seed,
+                                     n=eval_n)
+                    acct = res.fed.comm_bytes_per_round(res.state)
+                    cell = SweepCell(experiment, K, sname, res.history,
+                                     res.evals, final, res.timings,
+                                     codec=cname,
+                                     bytes_per_round=int(
+                                         acct["strategy_bytes_per_round"]))
+                    for row in cell.rows():
+                        f.write(json.dumps(row) + "\n")
+                    f.flush()
+                    cells.append(cell)
     if verbose:
         print(f"[sweep] wrote {path}")
         print(summary_table(cells))
@@ -97,19 +126,26 @@ def run_sweep(experiment: str, Ks: Sequence[int], *,
 
 
 def summary_table(cells: Sequence[SweepCell]) -> str:
-    """Fixed-width (K × strategy) table of the final metrics — the
-    robustness-to-reduced-communication curve in text form."""
-    strategies_ = list(dict.fromkeys(c.strategy for c in cells))
+    """Fixed-width (K × strategy × codec) table of the final metrics plus
+    bytes/round — the robustness-to-reduced-communication surface in text
+    form."""
+    labels = list(dict.fromkeys(c.label for c in cells))
     metrics = list(dict.fromkeys(k for c in cells for k in c.final))
-    by = {(c.K, c.strategy): c for c in cells}
-    cols = [f"{s}:{m}" for s in strategies_ for m in metrics]
+    metrics.append("B/round")
+    by = {(c.K, c.label): c for c in cells}
+    cols = [f"{s}:{m}" for s in labels for m in metrics]
     lines = ["  ".join(["K".rjust(6)] + [c.rjust(18) for c in cols])]
     for K in sorted(dict.fromkeys(c.K for c in cells)):
         row = [str(K).rjust(6)]
-        for s in strategies_:
+        for s in labels:
             cell = by.get((K, s))
             for m in metrics:
-                v = cell.final.get(m) if cell else None
+                if cell is None:
+                    v = None
+                elif m == "B/round":
+                    v = cell.bytes_per_round
+                else:
+                    v = cell.final.get(m)
                 row.append(("-" if v is None else f"{v:.4g}").rjust(18))
         lines.append("  ".join(row))
     return "\n".join(lines)
@@ -135,6 +171,10 @@ def main(argv: Any = None):
     ap.add_argument("--compare", default="",
                     help="comma-separated extra strategies to run beside "
                          "fedgan at every K (e.g. 'distributed')")
+    ap.add_argument("--codecs", default="",
+                    help="comma-separated wire codec specs to run on the "
+                         "fedgan base at every K (e.g. 'none,int8,int4'; "
+                         "'none' = uncompressed)")
     ap.add_argument("--steps", type=int, default=0,
                     help="local steps per run (0 = experiment default)")
     ap.add_argument("--eval-every", type=int, default=0,
@@ -150,10 +190,18 @@ def main(argv: Any = None):
         if s not in sync_strategies.STRATEGIES:
             ap.error(f"unknown --compare strategy {s!r}; known: "
                      f"{sorted(sync_strategies.STRATEGIES)}")
+    codecs = [c for c in args.codecs.split(",") if c] or ["none"]
+    from repro.comm import get_codec
+    for c in codecs:
+        if c != "none":
+            try:
+                get_codec(c)
+            except ValueError as e:
+                ap.error(str(e))
     run_sweep(args.experiment, parse_sweep(args.sweep), strategy_names=names,
-              steps=args.steps or None, seed=args.seed, out_dir=args.out_dir,
-              eval_every=args.eval_every, eval_n=args.eval_n,
-              rounds_per_chunk=args.rounds_per_chunk)
+              codec_names=codecs, steps=args.steps or None, seed=args.seed,
+              out_dir=args.out_dir, eval_every=args.eval_every,
+              eval_n=args.eval_n, rounds_per_chunk=args.rounds_per_chunk)
 
 
 if __name__ == "__main__":
