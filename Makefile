@@ -2,8 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint bench bench-dryrun bench-serve bench-rounds \
-        bench-comm sweep sweep-comm docs-check quickstart serve-example \
-        strategies-parity
+        bench-comm bench-privacy sweep sweep-comm sweep-privacy docs-check \
+        quickstart serve-example strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -49,6 +49,12 @@ bench-rounds:
 bench-comm:
 	$(PY) benchmarks/run.py --only comm --json
 
+# Privacy/robustness cost surface: mode coverage under a planted Byzantine
+# agent (plain vs trimmed-mean/median), DP-SGD with its accountant epsilon,
+# masked-sync overhead + wire accounting.  BENCH_privacy.json artifact.
+bench-privacy:
+	$(PY) benchmarks/run.py --only privacy --fast --json
+
 # The paper's robustness-to-reduced-communication curve in one command
 # (FID stand-in vs K, FedGAN vs the per-step distributed baseline).
 sweep:
@@ -62,6 +68,12 @@ sweep:
 sweep-comm:
 	$(PY) -m repro.run.experiments --experiment mixed_gaussian \
 	    --sweep K=5,20 --codecs none,int8,int4
+
+# The K×codec×privacy cost surface (PR 6 acceptance sweep): quality +
+# bytes/round + dp_epsilon per (K, privacy) cell on mixed_gaussian.
+sweep-privacy:
+	$(PY) -m repro.run.experiments --experiment mixed_gaussian \
+	    --sweep K=5,20 --privacy none,dp,secure,trimmed_mean,median
 
 quickstart:
 	$(PY) examples/quickstart.py --K 20

@@ -1,0 +1,179 @@
+"""repro.privacy — the cost of each privacy/robustness mechanism on the
+paper's mixed-Gaussian GAN (PR 6).
+
+Row families, all machine-readable through ``run.py --json``
+(BENCH_privacy.json — part of the committed perf trajectory):
+
+  * ``privacy_cov_*`` — pooled mode coverage at matched (B=8, K=5, steps;
+    one mode per agent — maximally non-iid) for: clean FedAvg, FedAvg
+    with one planted sign-flip Byzantine agent, trimmed-mean and
+    coordinate-median under the same attacker, and DP-SGD (clip=1,
+    sigma=0.5; the row carries the accountant's epsilon).  Structured
+    extras carry ``robust_coverage_gap`` — clean-FedAvg coverage minus
+    trimmed-mean-under-attack coverage — which the CI gate asserts stays
+    <= 1 (the robustness headline: one attacker destroys plain FedAvg,
+    costs a trimming server at most one mode).  The coordinate-median row
+    is the honest counterpoint: its robustness holds (breakdown f < B/2)
+    but its per-coordinate bias under this non-iid split costs most of
+    the coverage — the robustness/utility tradeoff is real and the
+    trimmed mean sits on the useful side of it.
+  * ``privacy_masked_sync`` — us/call of the pairwise-mask secure sum vs
+    the plain weighted average on the real mixed-Gaussian MLP params
+    (the mask generation + uint32 pad arithmetic overhead; the result is
+    bit-identical so the derived field is the max |delta| == 0 check).
+  * ``privacy_bytes`` — wire accounting: the masked sum ships the same
+    4 B/param image as plain FedAvg (masking is compute, not bytes),
+    shown against the int8 codec wire it refuses to compose with.
+
+Coverage rows are deliberately small-budget (a 2-core CI container): the
+gate is *relative* (trimmed-vs-clean gap), not an absolute quality bar.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core import FedAvgSync, FedGAN, FedGANConfig, make_gan_task
+from repro.core.strategies import CoordinateMedianSync, TrimmedMeanSync
+from repro.data import synthetic
+from repro.dist import collectives
+from repro.evals import mode_stats
+from repro.launch.train import mlp_gan_task
+from repro.optim import Adam, constant, equal_timescale
+from repro.privacy import DPSGD, SecureAgg, WithByzantine
+
+tmap = jax.tree_util.tree_map
+
+
+def _coverage(strategy=None, dp=None, steps=1500, B=8, K=5, n=128, seed=0):
+    """Train the paper's mixed-Gaussian MLP GAN (B=8 agents, each holding
+    ONE of the 8 modes — maximally non-iid) and return (modes covered,
+    us/step).  Same (net, lr) recipe as the tier-1 coverage gate
+    (tests/test_comm.py::_mixed_gaussian_coverage); B=8 rather than 4 so
+    a trim=1 order statistic keeps 6 honest values per coordinate — at
+    B=4 it keeps 2 and the robust/quality tradeoff is hopeless for any
+    aggregator."""
+    from repro.models.gan_nets import MLPDiscriminator, MLPGenerator
+    G = MLPGenerator(latent_dim=2, out_dim=2, hidden=64, depth=2)
+    D = MLPDiscriminator(in_dim=2, hidden=64, depth=2)
+    task = make_gan_task(G, D)
+    fed = FedGAN(task, FedGANConfig(agent_grid=(1, B), sync_interval=K,
+                                    strategy=strategy, dp=dp),
+                 opt_g=Adam(), opt_d=Adam(),
+                 scales=equal_timescale(constant(1e-3)))
+    state = fed.init_state(jax.random.key(seed))
+    round_fn = jax.jit(fed.round)
+    rng = jax.random.key(seed + 1)
+    t0 = time.perf_counter()
+    for r in range(steps // K):
+        rng, r1, r2, r3 = jax.random.split(rng, 4)
+        x = jnp.stack([synthetic.sample_mixed_gaussian(
+            jax.random.fold_in(r1, r * B + i), K * n,
+            mode_subset=[i % 8]).reshape(K, n, 2)
+            for i in range(B)], axis=1).reshape(K, 1, B, n, 2)
+        z = jax.random.normal(r2, (K, 1, B, n, 2))
+        seeds = jax.random.randint(r3, (K, 1, B), 0,
+                                   2 ** 31 - 1).astype(jnp.uint32)
+        state, _ = round_fn(state, {"x": x, "z": z}, seeds)
+    us = (time.perf_counter() - t0) / steps * 1e6
+    gp = fed.averaged_params(state)["gen"]
+    samples = G.apply(gp, jax.random.normal(jax.random.key(9), (2000, 2)))
+    covered, _, _ = mode_stats(samples, synthetic.mixed_gaussian_modes(),
+                               radius=0.5)
+    return int(covered), us
+
+
+def bench_robustness(steps=1200):
+    """Mode coverage under one planted Byzantine agent: plain FedAvg vs
+    the robust reduces.  Extras carry the trimmed-vs-clean gap the CI
+    gate asserts (<= 1 mode lost to one attacker)."""
+    clean, us = _coverage(FedAvgSync(), steps=steps)
+    emit("privacy_cov_clean_fedavg", us, f"modes={clean}/8",
+         modes_covered=clean)
+    rows = [
+        ("privacy_cov_fedavg_byz1", WithByzantine(FedAvgSync())),
+        ("privacy_cov_trimmed_byz1", WithByzantine(TrimmedMeanSync())),
+        ("privacy_cov_median_byz1", WithByzantine(CoordinateMedianSync())),
+    ]
+    gap = None
+    for name, strat in rows:
+        cov, us = _coverage(strat, steps=steps)
+        extra = {"modes_covered": cov, "attack": "sign_flip", "byzantine": 1}
+        if name == "privacy_cov_trimmed_byz1":
+            gap = clean - cov
+            extra["robust_coverage_gap"] = gap
+        emit(name, us, f"modes={cov}/8;clean={clean}/8", **extra)
+    return gap
+
+
+def bench_dp(steps=1200):
+    """DP-SGD cost row: per-example clipping + noise on both players,
+    with the closed-form RDP epsilon the run buys at this step budget."""
+    dp = DPSGD(clip=1.0, noise_multiplier=0.5)
+    cov, us = _coverage(dp=dp, steps=steps)
+    eps = dp.epsilon(steps)
+    emit("privacy_cov_dp", us,
+         f"modes={cov}/8;epsilon={eps:.1f};sigma={dp.noise_multiplier}",
+         modes_covered=cov, dp_epsilon=round(eps, 3),
+         noise_multiplier=dp.noise_multiplier, clip=dp.clip)
+
+
+def bench_masked_sync_overhead(B=4):
+    """us/call of masked_sync vs average_agents on the real mixed-Gaussian
+    MLP params — the price of the one-time-pad wire image (must stay
+    bit-identical, so the derived field doubles as an exactness check)."""
+    task, _ = mlp_gan_task(hidden=64)
+    params = task.init(jax.random.key(0))
+    stacked = tmap(lambda l: jnp.broadcast_to(
+        l * jnp.arange(1, B + 1, dtype=l.dtype).reshape(1, B, *([1] * l.ndim)),
+        (1, B) + l.shape).astype(l.dtype), params)
+    w = jnp.full((1, B), 1.0 / B)
+    key = collectives.mask_pair_key(jax.random.key(0), jnp.uint32(7))
+
+    plain = jax.jit(lambda t: collectives.average_agents(t, w))
+    masked = jax.jit(lambda t, k: collectives.masked_sync(t, w, k))
+    ref, us_plain = timed(plain, stacked)
+    got, us_masked = timed(masked, stacked, key)
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree_util.tree_leaves(ref),
+                                jax.tree_util.tree_leaves(got)))
+    emit("privacy_masked_sync", us_masked,
+         f"plain_us={us_plain:.1f};overhead={us_masked / us_plain:.2f}x;"
+         f"max_abs_delta={delta}",
+         plain_us=round(us_plain, 1),
+         overhead_ratio=round(us_masked / max(us_plain, 1e-9), 3),
+         bit_identical=delta == 0.0)
+
+
+def bench_bytes(K=5):
+    """Wire accounting: the secure sum ships the same float32 image as
+    plain FedAvg (masking costs compute, not bytes) — shown against the
+    int8 codec wire it refuses to compose with."""
+    from repro.comm import IntQuant
+    task, _ = mlp_gan_task(hidden=64)
+    params = task.init(jax.random.key(0))
+    fcfg = FedGANConfig(agent_grid=(1, 1), sync_interval=K)
+    plain = FedAvgSync().bytes_per_round(fcfg, params)
+    secure = FedAvgSync(secure_agg=SecureAgg()).bytes_per_round(fcfg, params)
+    int8 = FedAvgSync(codec=IntQuant(bits=8)).bytes_per_round(fcfg, params)
+    robust = TrimmedMeanSync().bytes_per_round(fcfg, params)
+    emit("privacy_bytes", 0.0,
+         f"fedgan_B={plain};secure_B={secure};trimmed_B={robust};"
+         f"int8_B={int8} (secure refuses codecs)",
+         bytes_per_round=int(plain), secure_bytes_per_round=int(secure),
+         secure_equals_plain=int(secure) == int(plain))
+
+
+def main(fast=False):
+    steps = 1500 if fast else 2500
+    bench_robustness(steps=steps)
+    bench_dp(steps=steps)
+    bench_masked_sync_overhead()
+    bench_bytes()
+
+
+if __name__ == "__main__":
+    main()

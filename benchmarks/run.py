@@ -13,6 +13,7 @@
 #   (g)    (roofline from dry-run)       -> bench_roofline
 #   kernels (Pallas vs oracle)           -> bench_kernels
 #   serving (tok/s + tick latency vs occupancy) -> bench_serve
+#   privacy (DP/secure-sum/robust cost surface) -> bench_privacy
 #
 # ``--json`` additionally writes one machine-readable BENCH_<suite>.json per
 # executed suite (into --json-dir), so the bench trajectory is comparable
@@ -40,8 +41,9 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_comm, bench_images, bench_kernels,
-                            bench_lemmas, bench_roofline, bench_rounds,
-                            bench_serve, bench_timeseries, bench_toy, common)
+                            bench_lemmas, bench_privacy, bench_roofline,
+                            bench_rounds, bench_serve, bench_timeseries,
+                            bench_toy, common)
 
     fast = args.fast
     suites = {
@@ -58,6 +60,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "serve": lambda: bench_serve.main(fast=fast),
         "rounds": lambda: bench_rounds.main(fast=fast),
+        "privacy": lambda: bench_privacy.main(fast=fast),
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

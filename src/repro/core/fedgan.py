@@ -64,6 +64,7 @@ class FedGANConfig:
     agent_grid: tuple[int, int] = (1, 5)  # (P pods, A agents/pod); B = P*A
     sync_interval: int = 20               # K
     strategy: Any = None                  # SyncStrategy; None -> FedAvgSync
+    dp: Any = None                        # repro.privacy.DPSGD; None -> no DP
     # -- deprecated closed-world fields, kept as a shim ---------------------
     mode: str = ""                        # fedgan|distributed|local_only|hierarchical
     intra_interval: int = 0               # K1 for the hierarchical shim
@@ -109,6 +110,8 @@ class FedGANConfig:
     def validate(self):
         strat = self.resolve_strategy()  # raises on unknown mode strings
         strat.validate(self)
+        if self.dp is not None:
+            self.dp.validate()
 
 
 def uniform_weights(cfg: FedGANConfig) -> jax.Array:
@@ -203,13 +206,22 @@ class FedGAN:
         lr_a = self.scales.a(n.astype(jnp.float32))
         lr_b = self.scales.b(n.astype(jnp.float32))
 
+        if self.cfg.dp is not None:
+            # per-agent DP-SGD: per-example clip + Gaussian noise replace
+            # the plain minibatch gradient (repro.privacy.dpsgd)
+            from repro.privacy.dpsgd import dp_grads
+            grads_of = lambda params, b, rng: dp_grads(
+                self._local_grads, params, b, rng, self.cfg.dp)
+        else:
+            grads_of = self._local_grads
+
         if jnp.issubdtype(rngs.dtype, jax.dtypes.prng_key):
             def agent_grads(params, b, rng):
-                return self._local_grads(params, b, rng)
+                return grads_of(params, b, rng)
         else:  # legacy uint32 seeds
             def agent_grads(params, b, seed):
                 rng = jax.random.fold_in(jax.random.key(0), seed)
-                return self._local_grads(params, b, rng)
+                return grads_of(params, b, rng)
 
         gd, gg, metrics = jax.vmap(jax.vmap(agent_grads))(state["params"], batch, rngs)
 

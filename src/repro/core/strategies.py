@@ -70,7 +70,7 @@ def _select(mask, new, old):
 
 
 def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
-            codec=None, error_feedback=True):
+            codec=None, error_feedback=True, reduce=None, secure_agg=None):
     """The eq. (2)+(3) aggregation restricted to ``subtrees`` (and optionally
     a participation ``mask``): weighted average over (P, A), broadcast back.
     Non-participating agents keep their local values (including their
@@ -80,21 +80,32 @@ def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
     wire directions move the compressed representation, and when
     ``error_feedback`` the per-agent uplink residuals (``state["ef"]``) and
     the shared downlink residual (``state["ef_down"]``) are updated in
-    place of being discarded."""
+    place of being discarded.
+
+    ``reduce`` swaps the weighted-mean einsum for a pluggable per-leaf
+    aggregate (``collectives.make_robust_reduce``) on both the plain and
+    coded paths.  ``secure_agg`` routes the plain path through
+    ``collectives.masked_sync`` — each subtree gets its own fold of the
+    per-round mask key (``salt``) so no leaf pad is ever reused."""
     w = fed._w()
     if mask is not None:
         w = w * mask
         w = w / jnp.sum(w)
 
-    def avg(tree):
-        out = collectives.average_agents(tree, w, sync_dtype=sync_dtype)
+    def avg(tree, salt=0):
+        if secure_agg is not None:
+            k = jax.random.fold_in(secure_agg.round_key(state["step"]), salt)
+            out = collectives.masked_sync(tree, w, k, reduce=reduce)
+        else:
+            out = collectives.average_agents(tree, w, sync_dtype=sync_dtype,
+                                             reduce=reduce)
         return out if mask is None else _select(mask, out, tree)
 
     new = dict(state)
     params = dict(state["params"])
     if codec is None:
-        for k in subtrees:
-            params[k] = avg(state["params"][k])
+        for i, k in enumerate(subtrees):
+            params[k] = avg(state["params"][k], salt=i)
     else:
         use_ef = error_feedback and "ef" in state
         ef = dict(state["ef"]) if use_ef else None
@@ -103,7 +114,7 @@ def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
             synced, e2, ed2 = collectives.coded_sync(
                 state["params"][k], w, codec,
                 ef=ef[k] if use_ef else None,
-                ef_down=ef_down[k] if use_ef else None)
+                ef_down=ef_down[k] if use_ef else None, reduce=reduce)
             if mask is not None:
                 synced = _select(mask, synced, state["params"][k])
                 if use_ef:
@@ -115,14 +126,15 @@ def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
             new["ef"], new["ef_down"] = ef, ef_down
     new["params"] = params
     if average_opt_state:
-        for k in subtrees:
+        for i, k in enumerate(subtrees):
             if codec is None:
-                new[_OPT_KEY[k]] = avg(state[_OPT_KEY[k]])
+                new[_OPT_KEY[k]] = avg(state[_OPT_KEY[k]],
+                                       salt=i + len(subtrees))
             else:
                 # optimizer moments ride the coded wire too, but without
                 # residuals — the moments are re-estimated every step anyway
                 synced, _, _ = collectives.coded_sync(state[_OPT_KEY[k]], w,
-                                                      codec)
+                                                      codec, reduce=reduce)
                 new[_OPT_KEY[k]] = (synced if mask is None else
                                     _select(mask, synced, state[_OPT_KEY[k]]))
     return new
@@ -178,6 +190,13 @@ class FedAvgSync(SyncStrategy):
     into the stream instead of being lost.  ``codec`` and ``sync_dtype``
     are mutually exclusive (no double compression — chain codecs with
     ``repro.comm.Sequential`` instead).
+
+    ``secure_agg`` (a ``repro.privacy.SecureAgg``) routes the sync through
+    ``collectives.masked_sync``: pairwise one-time-pad masking of the wire
+    image, bit-identical result.  It refuses to stack with anything that
+    would need per-agent server-side decoding (``codec``, ``sync_dtype``)
+    or per-agent visibility (subsampling, robust reduces) — see
+    docs/privacy.md for the full matrix.
     """
 
     sync_dtype: Any = None
@@ -185,6 +204,7 @@ class FedAvgSync(SyncStrategy):
     subtrees: tuple = ("gen", "disc")
     codec: Any = None
     error_feedback: bool = True
+    secure_agg: Any = None
     name = "fedgan"
 
     def validate(self, cfg):
@@ -199,6 +219,19 @@ class FedAvgSync(SyncStrategy):
                     "codec= and sync_dtype= are both wire compressions; "
                     "pick one (chain codecs with repro.comm.Sequential "
                     "instead of stacking a dtype cast on top)")
+        if self.secure_agg is not None:
+            self.secure_agg.validate()
+            if self.codec is not None:
+                raise ValueError(
+                    "secure_agg= cannot ride a codec= wire: decoding a "
+                    "lossy payload happens per agent at the server, which "
+                    "reveals exactly the individual updates the masking "
+                    "hides; pick one")
+            if self.sync_dtype is not None:
+                raise ValueError(
+                    "secure_agg= pads the 32-bit wire image; sync_dtype= "
+                    "re-encodes it per agent and breaks the pad "
+                    "cancellation; pick one")
 
     def init_round_state(self, fed, state) -> dict:
         if self.codec is None or not self.error_feedback:
@@ -217,12 +250,19 @@ class FedAvgSync(SyncStrategy):
         None for all.  Evaluated at round end (state['step'] = (r+1)*K)."""
         return None
 
+    def sync_reduce(self):
+        """The pluggable per-leaf aggregate, or None for the weighted-mean
+        einsum.  Robust strategies override this."""
+        return None
+
     def round_sync(self, fed, state):
         return _fedavg(fed, state, subtrees=self.subtrees,
                        average_opt_state=self.average_opt_state,
                        sync_dtype=self.sync_dtype, codec=self.codec,
                        error_feedback=self.error_feedback,
-                       mask=self.participation_mask(fed, state))
+                       mask=self.participation_mask(fed, state),
+                       reduce=self.sync_reduce(),
+                       secure_agg=self.secure_agg)
 
     def bytes_per_round(self, cfg, params, opt=None) -> int:
         wire = sum(collectives.sync_bytes(params[k],
@@ -264,6 +304,12 @@ class SubsampledFedAvg(FedAvgSync):
         super().validate(cfg)
         if not 0.0 < self.fraction <= 1.0:
             raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+        if self.secure_agg is not None:
+            raise ValueError(
+                "secure_agg= needs every pair's both mask halves on the "
+                "wire; per-round dropouts (subsampled participation) break "
+                "the cancellation — real SecAgg recovers dropped seeds via "
+                "a protocol this simulation does not model")
 
     def num_participants(self, cfg) -> int:
         return max(1, int(round(self.fraction * cfg.num_agents)))
@@ -366,6 +412,58 @@ class Hierarchical(FedAvgSync):
         return full + n_segs * intra
 
 
+_ROBUST_SECURE_ERR = (
+    "robust aggregation needs the individual per-agent values a secure "
+    "sum hides (order statistics cannot run on a masked total); drop "
+    "secure_agg or fall back to strategy='fedgan'")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedMeanSync(FedAvgSync):
+    """Byzantine-robust FedAvg: per coordinate, drop the ``trim`` smallest
+    and largest of the B agent values and average the rest.  Any f <= trim
+    arbitrarily-corrupted agents (sign-flipped, x100-scaled, NaN-emitting)
+    cannot move the aggregate outside the honest agents' range.  The §3.1
+    dataset-size weights are deliberately ignored (weight-oblivious — a
+    poisoned agent could otherwise buy influence via a claimed dataset
+    size)."""
+
+    trim: int = 1
+    name = "trimmed_mean"
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        if self.trim < 1:
+            raise ValueError(f"trim must be >= 1, got {self.trim}")
+        if cfg.num_agents <= 2 * self.trim:
+            raise ValueError(
+                f"trimmed_mean needs num_agents > 2*trim = {2 * self.trim}, "
+                f"got {cfg.num_agents} — no honest values would survive")
+        if self.secure_agg is not None:
+            raise ValueError(_ROBUST_SECURE_ERR)
+
+    def sync_reduce(self):
+        return collectives.make_robust_reduce("trimmed_mean", trim=self.trim)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordinateMedianSync(FedAvgSync):
+    """Byzantine-robust FedAvg via the per-coordinate (lower) median:
+    breakdown point f < B/2 — the strongest of the robust reduces, at the
+    cost of discarding all magnitude information.  Weight-oblivious, like
+    :class:`TrimmedMeanSync`."""
+
+    name = "median"
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        if self.secure_agg is not None:
+            raise ValueError(_ROBUST_SECURE_ERR)
+
+    def sync_reduce(self):
+        return collectives.make_robust_reduce("median")
+
+
 # ---------------------------------------------------------------------------
 # Registry + legacy-mode shim
 # ---------------------------------------------------------------------------
@@ -379,6 +477,8 @@ STRATEGIES = {
     "ps_fedgan": PartialSharing,
     "subsampled": SubsampledFedAvg,
     "adaptive_k": AdaptiveK,
+    "trimmed_mean": TrimmedMeanSync,
+    "median": CoordinateMedianSync,
 }
 
 

@@ -37,12 +37,23 @@ def agent_axes(mesh=None) -> tuple:
     return tuple(n for n in names if n in mesh.axis_names)
 
 
-def average_agents(tree, weights, *, sync_dtype=None):
+def weighted_mean(x, weights):
+    """The default reduce: weighted mean over the leading (P, A) dims —
+    the single einsum XLA lowers to one all-reduce per fusion group."""
+    return jnp.einsum("pa,pa...->...", weights.astype(x.dtype), x)
+
+
+def average_agents(tree, weights, *, sync_dtype=None, reduce=None):
     """Weighted average over the leading (P, A) dims, broadcast back.
 
     ``weights``: (P, A), assumed normalised.  One all-reduce over
     ("pod","data") per fusion group when the leading dims are sharded there.
+
+    ``reduce`` replaces the einsum with a pluggable per-leaf aggregate
+    ``reduce(x, weights) -> x.shape[2:]`` — e.g. a Byzantine-robust
+    trimmed mean or coordinate median (:func:`robust_reduce`).
     """
+    reduce = weighted_mean if reduce is None else reduce
 
     def avg(x):
         if not jnp.issubdtype(x.dtype, jnp.inexact):
@@ -51,10 +62,106 @@ def average_agents(tree, weights, *, sync_dtype=None):
             # truncate it to zero
             return x
         xs = x.astype(sync_dtype) if sync_dtype is not None else x
-        m = jnp.einsum("pa,pa...->...", weights.astype(xs.dtype), xs)
+        m = reduce(xs, weights)
         return jnp.broadcast_to(m.astype(x.dtype), x.shape)
 
     return tmap(avg, tree)
+
+
+def make_robust_reduce(kind: str, *, trim: int = 1):
+    """A pluggable ``reduce(x, weights)`` that tolerates Byzantine agents.
+
+    ``kind="trimmed_mean"``: per coordinate, sort the B = P·A agent values,
+    drop the ``trim`` smallest and ``trim`` largest, average the rest — any
+    f <= trim arbitrarily-corrupted agents (sign-flipped, scaled, NaN: NaN
+    sorts last, into the trimmed tail) cannot move the result outside the
+    honest agents' range.  ``kind="median"``: the per-coordinate median
+    (lower-median order statistic), breakdown point f < B/2.
+
+    Robust aggregation is weight-oblivious: the §3.1 dataset-size weights
+    are ignored (a poisoned agent could otherwise buy influence through a
+    claimed dataset size) — callers should treat agents uniformly.
+    """
+    if kind not in ("trimmed_mean", "median"):
+        raise ValueError(f"unknown robust reduce {kind!r}; "
+                         "known: ['median', 'trimmed_mean']")
+
+    def reduce(x, weights):
+        B = x.shape[0] * x.shape[1]
+        flat = jnp.sort(x.reshape((B,) + x.shape[2:]), axis=0)
+        if kind == "median":
+            # lower median: an actual honest value whenever f < B/2 (NaNs
+            # and scaled outliers sort to the tails, never the middle)
+            return flat[(B - 1) // 2]
+        if B <= 2 * trim:
+            raise ValueError(f"trimmed_mean needs more than 2*trim={2 * trim} "
+                             f"agents, got {B}")
+        return jnp.mean(flat[trim:B - trim], axis=0)
+
+    return reduce
+
+
+def mask_pair_key(key, step):
+    """The per-round mask PRG key: derived from the static fleet seed and
+    the (checkpointed) step counter, so masks are never reused across
+    rounds yet a restored run regenerates them exactly."""
+    return jax.random.fold_in(key, step)
+
+
+def _pairwise_masks(key, grid, shape):
+    """Net uint32 pairwise masks, one per agent: m_i = sum_{j>i} r_ij -
+    sum_{j<i} r_ji  (mod 2^32).  Summed over agents the r_ij terms
+    telescope to EXACTLY zero (modular integer arithmetic — no float
+    rounding), which is the cancellation real secure aggregation relies
+    on."""
+    P, A = grid
+    B = P * A
+    r = jax.random.bits(key, (B, B) + shape, jnp.uint32)
+    upper = (jnp.arange(B)[:, None] < jnp.arange(B)[None, :]
+             ).reshape((B, B) + (1,) * len(shape))
+    r = jnp.where(upper, r, jnp.uint32(0))
+    m = jnp.sum(r, axis=1, dtype=jnp.uint32) - jnp.sum(r, axis=0,
+                                                       dtype=jnp.uint32)
+    return m.reshape((P, A) + shape)
+
+
+def masked_sync(tree, weights, key, *, sync_dtype=None, reduce=None):
+    """Secure-aggregation-style sum: every agent's wire image is one-time-
+    padded with pairwise PRG masks before it leaves the agent.
+
+    Per inexact leaf: agent (p, a)'s uplink payload is the uint32 bit
+    pattern of its values plus its net pairwise mask, mod 2^32 — uniformly
+    random to anyone without the pair seeds (an exact one-time pad; no
+    quantization of the data, so the recovered values are bit-identical).
+    At the reduce the masks cancel (they telescope to zero modularly, see
+    :func:`_pairwise_masks`) and the ordinary weighted average proceeds on
+    the recovered values — output bit-identical to :func:`average_agents`
+    on the same weights.
+
+    ``key`` must be fresh per round (derive via :func:`mask_pair_key` from
+    the step counter — mask reuse breaks the pad).  The wire moves the same
+    4 bytes/element as the uncompressed float32 sync, so the §3.2
+    accounting is unchanged; a lossy codec cannot ride this wire (the
+    server would need per-agent decode — refuse upstream).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    outs = []
+    for i, x in enumerate(leaves):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            outs.append(x)
+            continue
+        if x.dtype.itemsize != 4:
+            raise ValueError(
+                f"masked_sync pads the 32-bit wire image; got {x.dtype} — "
+                "cast the synced tree to float32 or drop secure_agg")
+        k_leaf = jax.random.fold_in(key, i)
+        m = _pairwise_masks(k_leaf, x.shape[:2], x.shape[2:])
+        wire = jax.lax.bitcast_convert_type(x, jnp.uint32) + m  # uplink image
+        recovered = jax.lax.bitcast_convert_type(wire - m, x.dtype)
+        outs.append(recovered)
+    unmasked = jax.tree_util.tree_unflatten(treedef, outs)
+    return average_agents(unmasked, weights, sync_dtype=sync_dtype,
+                          reduce=reduce)
 
 
 def average_intra_pod(tree, weights):
@@ -71,7 +178,7 @@ def average_intra_pod(tree, weights):
     return tmap(avg, tree)
 
 
-def coded_sync(tree, weights, codec, *, ef=None, ef_down=None):
+def coded_sync(tree, weights, codec, *, ef=None, ef_down=None, reduce=None):
     """The full compressed intermediary sync for one subtree.
 
     Per inexact leaf: the agent adds its carried residual (``ef``), encodes
@@ -83,7 +190,12 @@ def coded_sync(tree, weights, codec, *, ef=None, ef_down=None):
 
     Returns ``(synced, new_ef, new_ef_down)`` — the residual trees are None
     when the corresponding input residuals are None (no error feedback).
+
+    ``reduce`` swaps the weighted mean at the decode→aggregate point for a
+    pluggable per-leaf aggregate (e.g. :func:`make_robust_reduce`) — the
+    robust statistics then run on the decoded per-agent wire images.
     """
+    reduce = weighted_mean if reduce is None else reduce
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     e_leaves = (jax.tree_util.tree_leaves(ef) if ef is not None
                 else [None] * len(leaves))
@@ -98,7 +210,7 @@ def coded_sync(tree, weights, codec, *, ef=None, ef_down=None):
             continue
         y = x + e if e is not None else x
         q = codec.roundtrip(y, batch_ndims=2)           # uplink wire image
-        m = jnp.einsum("pa,pa...->...", weights.astype(q.dtype), q)
+        m = reduce(q, weights)
         yd = m + ed if ed is not None else m
         qd = codec.roundtrip(yd)                        # downlink wire image
         outs.append(jnp.broadcast_to(qd.astype(x.dtype), x.shape))

@@ -104,6 +104,7 @@ class RunSpec:
     opt_g: Any = dataclasses.field(default_factory=Adam)
     opt_d: Any = dataclasses.field(default_factory=Adam)
     strategy: Any = None            # SyncStrategy; None -> FedAvgSync
+    dp: Any = None                  # repro.privacy.DPSGD; None -> no DP
     sample_extra: Any = None
     weights: Any = None
     seed: int = 0
@@ -122,7 +123,7 @@ class RunSpec:
         fed = FedGAN(self.task,
                      FedGANConfig(agent_grid=self.agent_grid,
                                   sync_interval=self.K,
-                                  strategy=self.strategy),
+                                  strategy=self.strategy, dp=self.dp),
                      opt_g=self.opt_g, opt_d=self.opt_d,
                      scales=self.scales or equal_timescale(constant(1e-3)),
                      weights=self.weights)
@@ -188,7 +189,8 @@ def _pooled_real(agent_data, seed: int = 0):
 
 def experiment_spec(name: str, *, K: int | None = None,
                     steps: int | None = None, seed: int = 0, strategy=None,
-                    ckpt_dir: str = "", batch_size: int | None = None,
+                    dp=None, ckpt_dir: str = "",
+                    batch_size: int | None = None,
                     agents: int | None = None, log_every: int | None = None,
                     eval_every: int = 0, data_mode: str = "stream",
                     rounds_per_chunk: int = 1):
@@ -287,7 +289,7 @@ def experiment_spec(name: str, *, K: int | None = None,
     spec = RunSpec(
         task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
         batch_size=batch_size, scales=scales_for(exp), opt_d=opt_d,
-        opt_g=opt_g, strategy=strategy, sample_extra=extra, seed=seed,
+        opt_g=opt_g, strategy=strategy, dp=dp, sample_extra=extra, seed=seed,
         log_every=max((steps // K) // 10, 1) if log_every is None else log_every,
         ckpt_dir=ckpt_dir, data_mode=data_mode,
         rounds_per_chunk=rounds_per_chunk, eval_every=eval_every,
@@ -296,18 +298,18 @@ def experiment_spec(name: str, *, K: int | None = None,
 
 
 def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
-                   strategy=None, ckpt_dir: str = "", batch_size=None,
-                   agents=None, log_every=None, eval_every: int = 0,
-                   data_mode: str = "stream"):
+                   strategy=None, dp=None, ckpt_dir: str = "",
+                   batch_size=None, agents=None, log_every=None,
+                   eval_every: int = 0, data_mode: str = "stream"):
     spec, _ = experiment_spec(
-        name, K=K, steps=steps, seed=seed, strategy=strategy,
+        name, K=K, steps=steps, seed=seed, strategy=strategy, dp=dp,
         ckpt_dir=ckpt_dir, batch_size=batch_size, agents=agents,
         log_every=log_every, eval_every=eval_every, data_mode=data_mode)
     return spec.run()
 
 
 def arch_smoke_spec(arch: str, *, steps: int, K: int, seed: int,
-                    strategy=None, ckpt_dir: str = "",
+                    strategy=None, dp=None, ckpt_dir: str = "",
                     batch_size: int | None = None, agents: int | None = None,
                     log_every: int | None = None, data_mode: str = "stream",
                     rounds_per_chunk: int = 1) -> RunSpec:
@@ -331,13 +333,13 @@ def arch_smoke_spec(arch: str, *, steps: int, K: int, seed: int,
     return RunSpec(
         task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
         batch_size=batch_size or 8, scales=equal_timescale(constant(1e-3)),
-        opt_d=Adam(), opt_g=Adam(), strategy=strategy, seed=seed,
+        opt_d=Adam(), opt_g=Adam(), strategy=strategy, dp=dp, seed=seed,
         log_every=1 if log_every is None else log_every, ckpt_dir=ckpt_dir,
         data_mode=data_mode, rounds_per_chunk=rounds_per_chunk)
 
 
 def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None,
-                   ckpt_dir: str = "", batch_size=None, agents=None,
+                   dp=None, ckpt_dir: str = "", batch_size=None, agents=None,
                    log_every=None, data_mode: str = "stream"):
     """Federated adversarial training of a reduced assigned backbone.
 
@@ -345,7 +347,7 @@ def run_arch_smoke(arch: str, *, steps: int, K: int, seed: int, strategy=None,
     ``repro.serve`` engine in another process can hot-reload live — the
     two-terminal walkthrough in docs/serving.md."""
     return arch_smoke_spec(
-        arch, steps=steps, K=K, seed=seed, strategy=strategy,
+        arch, steps=steps, K=K, seed=seed, strategy=strategy, dp=dp,
         ckpt_dir=ckpt_dir, batch_size=batch_size, agents=agents,
         log_every=log_every, data_mode=data_mode).run()
 
@@ -389,6 +391,22 @@ def build_parser() -> argparse.ArgumentParser:
                     help="adaptive_k: rounds that sync every round")
     ap.add_argument("--sync-every", type=int, default=0,
                     help="adaptive_k: post-warmup rounds between syncs")
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="DP-SGD per-example clip norm C (enables DP; "
+                         "defaults to 1.0 when only --dp-noise is given)")
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="DP-SGD noise multiplier sigma (0 = clip-only)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="delta at which the accountant reports epsilon")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-mask secure summing at the sync "
+                         "(bit-identical result; refuses --codec/--sync-dtype)")
+    ap.add_argument("--robust", default="",
+                    choices=["", "trimmed_mean", "median"],
+                    help="Byzantine-robust aggregation (shorthand for "
+                         "--strategy trimmed_mean|median)")
+    ap.add_argument("--trim", type=int, default=0,
+                    help="trimmed_mean: agents trimmed per tail (default 1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--batch-size", type=int, default=0,
@@ -420,9 +438,18 @@ def strategy_from_args(args) -> strategies.SyncStrategy | None:
         raise ValueError(
             "--codec and --sync-dtype are both wire compressions; pick one "
             "(chain codecs via --codec a+b instead)")
-    if args.strategy or (codec is not None and not args.mode):
-        # a bare --codec implies the FedAvgSync base strategy, through the
-        # same knob validation (no silent drops of e.g. --participation)
+    robust = getattr(args, "robust", "")
+    if robust:
+        # --robust is shorthand for --strategy trimmed_mean|median
+        if args.strategy and args.strategy != robust:
+            raise ValueError(f"--robust {robust} conflicts with "
+                             f"--strategy {args.strategy}; pick one")
+        args.strategy = robust
+    secure = getattr(args, "secure_agg", False)
+    if args.strategy or ((codec is not None or secure) and not args.mode):
+        # a bare --codec/--secure-agg implies the FedAvgSync base strategy,
+        # through the same knob validation (no silent drops of e.g.
+        # --participation)
         cls = (strategies.STRATEGIES[args.strategy] if args.strategy
                else strategies.FedAvgSync)
         fields = {f.name for f in dataclasses.fields(cls)}
@@ -431,6 +458,9 @@ def strategy_from_args(args) -> strategies.SyncStrategy | None:
             requested["sync_dtype"] = sync_dtype
         if codec is not None:
             requested["codec"] = codec
+        if secure:
+            from repro.privacy import SecureAgg
+            requested["secure_agg"] = SecureAgg(seed=args.seed)
         if args.average_opt_state:
             requested["average_opt_state"] = True
         if args.intra_interval:
@@ -441,9 +471,11 @@ def strategy_from_args(args) -> strategies.SyncStrategy | None:
             requested["warmup_rounds"] = args.warmup_rounds
         if args.sync_every:
             requested["sync_every"] = args.sync_every
+        if getattr(args, "trim", 0):
+            requested["trim"] = args.trim
         stray = sorted(set(requested) - fields)
         if stray:
-            name = args.strategy or "fedgan (implied by --codec)"
+            name = args.strategy or "fedgan (implied by --codec/--secure-agg)"
             raise ValueError(
                 f"--strategy {name} does not accept {stray} "
                 f"(its knobs: {sorted(fields)})")
@@ -452,16 +484,30 @@ def strategy_from_args(args) -> strategies.SyncStrategy | None:
         if codec is not None:
             raise ValueError("--codec requires --strategy (the legacy "
                              "--mode strings predate the codec axis)")
+        if secure:
+            raise ValueError("--secure-agg requires --strategy (the legacy "
+                             "--mode strings predate the privacy axis)")
         return strategies.strategy_from_mode(
             args.mode, intra_interval=args.intra_interval,
             sync_dtype=sync_dtype, average_opt_state=args.average_opt_state)
     return None
 
 
+def dp_from_args(args):
+    """CLI flags -> repro.privacy.DPSGD (None when no DP flag is set).
+    ``--dp-noise`` alone enables DP at the default clip of 1.0."""
+    if not (getattr(args, "dp_clip", 0.0) or getattr(args, "dp_noise", 0.0)):
+        return None
+    from repro.privacy import DPSGD
+    return DPSGD(clip=args.dp_clip or 1.0, noise_multiplier=args.dp_noise,
+                 delta=getattr(args, "dp_delta", 1e-5))
+
+
 def main():
     ap = build_parser()
     args = ap.parse_args()
     strategy = strategy_from_args(args)
+    dp = dp_from_args(args)
     overrides = dict(batch_size=args.batch_size or None,
                      agents=args.agents or None,
                      log_every=None if args.log_every < 0 else args.log_every,
@@ -469,14 +515,15 @@ def main():
 
     if args.experiment:
         run_experiment(args.experiment, K=args.K or None, steps=args.steps or None,
-                       seed=args.seed, strategy=strategy, ckpt_dir=args.ckpt_dir,
+                       seed=args.seed, strategy=strategy, dp=dp,
+                       ckpt_dir=args.ckpt_dir,
                        eval_every=args.eval_every, **overrides)
     elif args.arch:
         if args.eval_every:
             ap.error("--eval-every needs --experiment (no eval suite exists "
                      "for backbone smoke runs)")
         run_arch_smoke(args.arch, steps=args.steps or 20, K=args.K or 5,
-                       seed=args.seed, strategy=strategy,
+                       seed=args.seed, strategy=strategy, dp=dp,
                        ckpt_dir=args.ckpt_dir, **overrides)
     else:
         ap.error("need --experiment or --arch")

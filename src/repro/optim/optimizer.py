@@ -120,6 +120,15 @@ def global_norm(tree) -> jax.Array:
 
 
 def clip_by_global_norm(grads, max_norm: float):
+    """Scale ``grads`` so their global norm is at most ``max_norm``.
+
+    Exact at norm=0: an all-zero tree passes through with scale 1.0 (the
+    old ``max_norm / (norm + eps)`` guard produced ~1e12·max_norm there,
+    which is still clamped to 1.0 by the min — unless max_norm < 1e-12 —
+    but more importantly it divides 0/eps inside the unclamped branch,
+    wrecking gradients *through* the clip).  The ``where`` keeps both the
+    value and its gradient finite on the zero branch."""
     norm = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    scale = jnp.where(norm > 0, jnp.minimum(1.0, max_norm / safe), 1.0)
     return _tree_map(lambda g: g * scale, grads), norm

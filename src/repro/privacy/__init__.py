@@ -1,0 +1,30 @@
+"""repro.privacy — the privacy/robustness axis of the FedGAN runtime.
+
+Three mechanisms, three threat models (docs/privacy.md):
+
+  * :class:`DPSGD` — per-agent DP-SGD (per-example clip + Gaussian noise
+    inside the jitted step) with the closed-form RDP accountant in
+    :mod:`repro.privacy.accountant`; plugs into ``FedGANConfig(dp=...)``.
+  * :class:`SecureAgg` — pairwise-mask secure summing at the intermediary
+    (``FedAvgSync(secure_agg=...)``); mechanism in
+    ``repro.dist.collectives.masked_sync``.
+  * Byzantine-robust aggregation — ``TrimmedMeanSync`` / ``CoordinateMedianSync``
+    in :mod:`repro.core.strategies`, exercised by the attack simulators in
+    :mod:`repro.privacy.attacks`.
+"""
+from repro.privacy import accountant
+from repro.privacy.attacks import ATTACKS, WithByzantine, corrupt
+from repro.privacy.dpsgd import DPSGD, dp_grads, noise_like, per_example_grads
+from repro.privacy.secure import SecureAgg
+
+__all__ = [
+    "ATTACKS",
+    "DPSGD",
+    "SecureAgg",
+    "WithByzantine",
+    "accountant",
+    "corrupt",
+    "dp_grads",
+    "noise_like",
+    "per_example_grads",
+]

@@ -1,0 +1,112 @@
+"""Byzantine attack simulation — the adversaries the robust aggregators
+are tested against.
+
+:class:`WithByzantine` wraps any ``FedAvgSync``-family strategy: at sync
+time the first ``num_byzantine`` agents of the flattened (P, A) grid ship
+corrupted parameters instead of their honest ones (the corruption models
+what a malicious agent PUTS ON THE WIRE — its local training is
+irrelevant, it can send anything).  The wrapped strategy then aggregates
+the poisoned fleet exactly as it would the honest one, so
+
+    WithByzantine(FedAvgSync(), ...)      shows the damage (one scaled
+                                          agent moves the plain average
+                                          arbitrarily far),
+    WithByzantine(TrimmedMeanSync(), ...) shows the defence (f <= trim
+                                          attackers are order statistics
+                                          in the trimmed tail).
+
+Attacks:
+
+  ``sign_flip``  ship -x (the classic model-replacement direction)
+  ``scale``      ship scale·x (default x100 — a magnitude outlier)
+  ``nan``        ship NaN everywhere (a crash-the-fleet griefer)
+
+This is test/bench scaffolding, not a training feature: it lives in
+``repro.privacy`` so the adversarial suite and ``bench_privacy`` share
+one implementation, but it is deliberately not registered in the
+``--strategy`` CLI registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+ATTACKS = ("sign_flip", "scale", "nan")
+
+
+def corrupt(tree, *, attack: str, num_byzantine: int, scale: float = 100.0):
+    """Corrupt the first ``num_byzantine`` agents' slices of every inexact
+    agent-stacked (P, A, ...) leaf."""
+    if attack not in ATTACKS:
+        raise ValueError(f"unknown attack {attack!r}; known: {list(ATTACKS)}")
+
+    def poison(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x
+        P, A = x.shape[:2]
+        flat = x.reshape((P * A,) + x.shape[2:])
+        if attack == "sign_flip":
+            bad = -flat
+        elif attack == "scale":
+            bad = scale * flat
+        else:
+            bad = jnp.full_like(flat, jnp.nan)
+        mask = (jnp.arange(P * A) < num_byzantine).reshape(
+            (P * A,) + (1,) * (flat.ndim - 1))
+        return jnp.where(mask, bad, flat).reshape(x.shape)
+
+    return tmap(poison, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class WithByzantine:
+    """Strategy wrapper planting Byzantine agents at sync time (see module
+    docstring).  Delegates every hook to ``inner``; only the parameters
+    the attackers ship are corrupted."""
+
+    inner: Any
+    attack: str = "sign_flip"
+    num_byzantine: int = 1
+    scale: float = 100.0
+
+    @property
+    def name(self):
+        return f"{self.inner.name}+byz_{self.attack}x{self.num_byzantine}"
+
+    @property
+    def intra_interval(self):
+        return self.inner.intra_interval
+
+    def validate(self, cfg):
+        if self.attack not in ATTACKS:
+            raise ValueError(f"unknown attack {self.attack!r}; "
+                             f"known: {list(ATTACKS)}")
+        if not 0 <= self.num_byzantine <= cfg.num_agents:
+            raise ValueError(
+                f"num_byzantine must be in [0, {cfg.num_agents}], "
+                f"got {self.num_byzantine}")
+        self.inner.validate(cfg)
+
+    def init_round_state(self, fed, state):
+        return self.inner.init_round_state(fed, state)
+
+    def grad_hook(self, fed, grad_disc, grad_gen, state):
+        return self.inner.grad_hook(fed, grad_disc, grad_gen, state)
+
+    def segment_sync(self, fed, state):
+        return self.inner.segment_sync(fed, state)
+
+    def round_sync(self, fed, state):
+        poisoned = dict(state)
+        poisoned["params"] = corrupt(state["params"], attack=self.attack,
+                                     num_byzantine=self.num_byzantine,
+                                     scale=self.scale)
+        return self.inner.round_sync(fed, poisoned)
+
+    def bytes_per_round(self, cfg, params, opt=None) -> int:
+        return self.inner.bytes_per_round(cfg, params, opt)

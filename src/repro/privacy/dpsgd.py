@@ -1,0 +1,133 @@
+"""Per-agent DP-SGD: per-example clipping + Gaussian noise inside the
+jitted ``FedGAN._step``.
+
+Each agent's minibatch gradient is replaced by the Gaussian mechanism:
+
+    g = mean_i( clip_C(grad_i) ) + N(0, (sigma·C / n)^2)
+
+where grad_i is the gradient of example i ALONE (a vmap over the batch
+axis, reusing ``repro.optim.clip_by_global_norm`` per sample), C is the
+clip norm, sigma the noise multiplier and n the per-agent batch size.
+Both players are clipped and noised independently at the same (C, sigma)
+— the discriminator is the privacy-critical player (it touches real
+data), but the generator update is a post-processing of the SAME batch
+through the discriminator in most GAN losses, so we pay for both rather
+than claim a free generator.
+
+Noise is keyed off the typed per-agent PRNG keys the runtime threads
+through ``_step`` (PR 4): every (agent, step, leaf) triple draws from its
+own fold of the round key — bit-reproducible from the round key, never
+shared across agents.
+
+The privacy spend is tracked by the closed-form RDP accountant
+(``repro.privacy.accountant``) — :meth:`DPSGD.epsilon` is what
+``RoundDriver`` surfaces next to the round metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import clip_by_global_norm
+from repro.privacy import accountant
+
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSGD:
+    """Per-agent DP-SGD config — the privacy axis of ``FedGANConfig``.
+
+    ``clip``: per-example global-norm bound C (applied per player).
+    ``noise_multiplier``: sigma; the noise std is sigma·C/n per coordinate
+    of the MEAN gradient.  0 disables noise (clip-only — no epsilon).
+    ``delta``: the delta at which :meth:`epsilon` reports the spend.
+    ``sample_rate``: the accountant's subsampling rate q (the fraction of
+    an agent's examples in each step's batch); the mechanism itself sees
+    whatever batch the data pipeline delivers — q is accounting metadata,
+    so keep it consistent with batch_size / |R_i|.
+    """
+
+    clip: float = 1.0
+    noise_multiplier: float = 0.0
+    delta: float = 1e-5
+    sample_rate: float = 1.0
+
+    def validate(self):
+        if self.clip <= 0:
+            raise ValueError(f"DPSGD clip must be > 0, got {self.clip}")
+        if self.noise_multiplier < 0:
+            raise ValueError(f"DPSGD noise_multiplier must be >= 0, "
+                             f"got {self.noise_multiplier}")
+        if not 0.0 < self.sample_rate <= 1.0:
+            raise ValueError(f"DPSGD sample_rate must be in (0, 1], "
+                             f"got {self.sample_rate}")
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError(f"DPSGD delta must be in (0, 1), "
+                             f"got {self.delta}")
+
+    def epsilon(self, steps: int) -> float:
+        """Privacy spent after ``steps`` local steps (inf when sigma=0)."""
+        return accountant.epsilon(noise_multiplier=self.noise_multiplier,
+                                  steps=steps, sample_rate=self.sample_rate,
+                                  delta=self.delta)
+
+
+def per_example_grads(grad_fn, params, batch, rng, clip: float):
+    """Per-example clipped gradients for ONE agent.
+
+    ``grad_fn(params, batch, rng) -> (grad_disc, grad_gen, metrics)`` is
+    the agent's ordinary minibatch gradient function; it is re-run per
+    example (a vmap over the leading batch axis, each example wrapped back
+    into a batch of one so batch-mean losses are unchanged).  Returns
+    ``(gd, gg, norms_d, norms_g, metrics)`` with a leading example axis on
+    everything; each per-example grad has global norm <= clip EXACTLY.
+    """
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    ex_keys = jax.random.split(rng, n)
+
+    def one(ex, k):
+        gd, gg, m = grad_fn(params, tmap(lambda v: v[None], ex), k)
+        gd, nd = clip_by_global_norm(gd, clip)
+        gg, ng = clip_by_global_norm(gg, clip)
+        return gd, gg, nd, ng, m
+
+    return jax.vmap(one)(batch, ex_keys)
+
+
+def noise_like(tree, rng, std):
+    """Gaussian noise shaped like ``tree``; one key fold per leaf so the
+    draw is bit-reproducible from ``rng`` and leaf-order stable."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    noised = [std * jax.random.normal(jax.random.fold_in(rng, i),
+                                      l.shape, l.dtype)
+              for i, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+def dp_grads(grad_fn, params, batch, rng, dp: DPSGD):
+    """The full per-agent DP-SGD gradient: per-example clip, mean, noise.
+
+    ``rng`` is the agent's typed step key; it is split into the loss keys
+    (one per example) and the noise key, so the noise differs across
+    agents exactly as the step keys do.  Returns ``(gd, gg, metrics)``
+    matching the un-private ``grad_fn`` contract, with the mean pre-clip
+    per-example norms added to the metrics (``dp_grad_norm_d/g`` — the
+    device-side signal for tuning C)."""
+    r_loss, r_noise = jax.random.split(rng)
+    gd, gg, nd, ng, m = per_example_grads(grad_fn, params, batch, r_loss,
+                                          dp.clip)
+    n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    gd = tmap(lambda g: jnp.mean(g, axis=0), gd)
+    gg = tmap(lambda g: jnp.mean(g, axis=0), gg)
+    if dp.noise_multiplier:
+        std = dp.noise_multiplier * dp.clip / n
+        kd, kg = jax.random.split(r_noise)
+        gd = tmap(jnp.add, gd, noise_like(gd, kd, std))
+        gg = tmap(jnp.add, gg, noise_like(gg, kg, std))
+    metrics = tmap(lambda v: jnp.mean(v, axis=0), m)
+    metrics = {**metrics, "dp_grad_norm_d": jnp.mean(nd),
+               "dp_grad_norm_g": jnp.mean(ng)}
+    return gd, gg, metrics

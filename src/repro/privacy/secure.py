@@ -1,0 +1,49 @@
+"""Secure-aggregation-style masked summing — the strategy-facing config.
+
+The mechanism itself lives in ``repro.dist.collectives.masked_sync``:
+every agent one-time-pads the uint32 bit pattern of its uplink payload
+with net pairwise PRG masks, and the masks telescope to exactly zero
+(modular integer arithmetic) at the reduce — so the intermediary learns
+the weighted average and nothing else, while the recovered values (and
+therefore the training trajectory) are bit-identical to the plain
+``average_agents`` sync.
+
+:class:`SecureAgg` is the knob ``FedAvgSync(secure_agg=...)`` takes: a
+static fleet seed from which the per-round mask key is derived via the
+(checkpointed) step counter — a restored run regenerates the same masks,
+and no round ever reuses a pad.
+
+What it refuses to stack with (loud errors, mirroring the PR 5
+sync_dtype+codec refusal pattern — see ``FedAvgSync.validate``):
+
+  * ``codec=`` / ``sync_dtype=`` — a lossy re-encoding happens per agent
+    and must be decoded per agent at the server, which reveals exactly the
+    individual updates the masking exists to hide;
+  * ``SubsampledFedAvg`` — pairwise masks only cancel when every pair's
+    both halves hit the wire; per-round dropouts need the full SecAgg
+    seed-recovery protocol this simulation does not model;
+  * Byzantine-robust reduces (trimmed mean / median) — order statistics
+    need the individual per-agent values the secure sum hides.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAgg:
+    """Pairwise-mask secure summing config (see module docstring)."""
+
+    seed: int = 0
+
+    def validate(self):
+        pass
+
+    def round_key(self, step):
+        """The per-round mask PRG key; ``step`` is the (traced) step
+        counter at sync time — checkpointed state, so save/restore
+        reproduces the masks exactly."""
+        from repro.dist import collectives
+        return collectives.mask_pair_key(jax.random.key(self.seed), step)

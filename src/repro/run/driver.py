@@ -134,6 +134,9 @@ class RoundDriver:
             "round_gap_s": gap / max(self.n_rounds, 1),
             "data_kind": kind,
         }
+        dp = getattr(self.fed.cfg, "dp", None)
+        if dp is not None:
+            timings["dp_epsilon"] = dp.epsilon(self.n_rounds * K)
         return RunResult(self.fed, state, history, self._evals, timings)
 
     # ------------------------------------------------------------------
@@ -217,6 +220,11 @@ class RoundDriver:
             scores = {}
             for hook in self.eval_hooks:
                 scores.update(hook(self.fed, state, r))
+            dp = getattr(self.fed.cfg, "dp", None)
+            if dp is not None:
+                # closed-form RDP accountant (host-side, cheap): the privacy
+                # spent by the (r+1)*K local steps so far
+                scores["dp_epsilon"] = dp.epsilon((r + 1) * K)
             self._evals.append({"round": r, "step": (r + 1) * K, **scores})
             if self.verbose:
                 pretty = " ".join(f"{k}={v:.4g}" for k, v in scores.items())

@@ -14,6 +14,12 @@ strategy): the summary then shows metric AND measured bytes/round per
 (K, codec) cell — the paper's K-robustness claim extended to a full
 K×compression surface (see docs/communication.md).
 
+``--privacy none,dp,secure,trimmed_mean,median`` adds the privacy axis
+(``repro.privacy``, docs/privacy.md) on the same base: per-agent DP-SGD
+(the final row then carries the accountant's ``dp_epsilon``), pairwise-
+mask secure summing (bit-identical — a free column), and the
+Byzantine-robust reduces — the K×codec×privacy cost surface of PR 6.
+
 Every run streams a structured JSONL history (one line per round + one
 ``"final"`` line with the ``repro.evals`` scores) into
 ``<out_dir>/sweep_<experiment>.jsonl`` and the command ends with a summary
@@ -34,9 +40,12 @@ from repro.core import strategies as sync_strategies
 from repro.run.evals import final_fd
 
 
+PRIVACY_AXES = ("none", "dp", "secure", "trimmed_mean", "median")
+
+
 @dataclasses.dataclass
 class SweepCell:
-    """One (K, strategy, codec) run of the sweep."""
+    """One (K, strategy, codec, privacy) run of the sweep."""
 
     experiment: str
     K: int
@@ -46,48 +55,86 @@ class SweepCell:
     final: dict
     timings: dict
     codec: str = "none"
+    privacy: str = "none"
     bytes_per_round: int = 0
 
     @property
     def label(self) -> str:
-        return (self.strategy if self.codec == "none"
-                else f"{self.strategy}+{self.codec}")
+        parts = [self.strategy]
+        if self.codec != "none":
+            parts.append(self.codec)
+        if self.privacy != "none":
+            parts.append(self.privacy)
+        return "+".join(parts)
 
     def rows(self):
         base = {"experiment": self.experiment, "K": self.K,
-                "strategy": self.strategy, "codec": self.codec}
+                "strategy": self.strategy, "codec": self.codec,
+                "privacy": self.privacy}
         for r, m in enumerate(self.history):
             yield {**base, "round": r, "step": (r + 1) * self.K,
                    **{k: v for k, v in m.items()
                       if isinstance(v, (int, float))}}
         for e in self.evals:
             yield {**base, "eval": True, **e}
+        extra = {}
+        if "dp_epsilon" in self.timings:
+            extra["dp_epsilon"] = self.timings["dp_epsilon"]
         yield {**base, "final": True, **self.final,
                "bytes_per_round": self.bytes_per_round,
-               "steps_per_s": round(self.timings["steps_per_s"], 2)}
+               "steps_per_s": round(self.timings["steps_per_s"], 2), **extra}
 
 
-def _strategy_for(name: str, codec: str = "none"):
-    """Sweep-cell strategy: 'fedgan' keeps the library default (FedAvgSync),
-    anything else resolves through the registry; a codec spec wraps the
-    fedgan base in a compressed-sync FedAvgSync (error feedback on)."""
+def _strategy_for(name: str, codec: str = "none", privacy: str = "none"):
+    """Sweep-cell (strategy, dp) pair: 'fedgan' keeps the library default
+    (FedAvgSync), anything else resolves through the registry; a codec spec
+    wraps the fedgan base in a compressed-sync FedAvgSync (error feedback
+    on).  The privacy axis rides the fedgan base too: 'dp' turns on
+    per-agent DP-SGD (returned as the dp config, not a strategy), 'secure'
+    the pairwise-mask sum, 'trimmed_mean'/'median' the robust reduces
+    (these compose with a codec; secure does not — loud error)."""
+    if privacy not in PRIVACY_AXES:
+        raise ValueError(f"unknown privacy axis {privacy!r}; "
+                         f"known: {list(PRIVACY_AXES)}")
+    dp = None
+    kwargs = {}
     if codec != "none":
         from repro.comm import get_codec
-        return sync_strategies.FedAvgSync(codec=get_codec(codec))
-    return None if name == "fedgan" else sync_strategies.get_strategy(name)
+        kwargs["codec"] = get_codec(codec)
+    if privacy == "dp":
+        from repro.privacy import DPSGD
+        dp = DPSGD(clip=1.0, noise_multiplier=0.8)
+    elif privacy == "secure":
+        if codec != "none":
+            raise ValueError(
+                "privacy='secure' cannot ride a lossy codec wire (per-agent "
+                "decode at the server reveals the updates the masking "
+                "hides); drop the codec or the secure axis")
+        from repro.privacy import SecureAgg
+        kwargs["secure_agg"] = SecureAgg()
+    if privacy == "trimmed_mean":
+        return sync_strategies.TrimmedMeanSync(**kwargs), dp
+    if privacy == "median":
+        return sync_strategies.CoordinateMedianSync(**kwargs), dp
+    if kwargs:
+        return sync_strategies.FedAvgSync(**kwargs), dp
+    return (None if name == "fedgan"
+            else sync_strategies.get_strategy(name)), dp
 
 
 def run_sweep(experiment: str, Ks: Sequence[int], *,
               strategy_names: Sequence[str] = ("fedgan",),
               codec_names: Sequence[str] = ("none",),
+              privacy_names: Sequence[str] = ("none",),
               steps: int | None = None, seed: int = 0, out_dir: str = ".",
               eval_every: int = 0, eval_n: int = 2048,
               rounds_per_chunk: int = 8, verbose: bool = True
               ) -> list[SweepCell]:
-    """Run the (K × strategy × codec) grid on the device-resident runtime
-    and persist JSONL histories.  Codecs apply to the ``fedgan`` base
-    strategy only (the comparison strategies run uncompressed).  Returns
-    the grid cells for programmatic use (tests, benchmarks)."""
+    """Run the (K × strategy × codec × privacy) grid on the device-resident
+    runtime and persist JSONL histories.  Codecs and privacy axes apply to
+    the ``fedgan`` base strategy only (the comparison strategies run
+    uncompressed/unprotected).  Returns the grid cells for programmatic
+    use (tests, benchmarks)."""
     from repro.launch.train import experiment_spec
     cells = []
     os.makedirs(out_dir, exist_ok=True)
@@ -96,29 +143,33 @@ def run_sweep(experiment: str, Ks: Sequence[int], *,
         for K in Ks:
             for sname in strategy_names:
                 specs_c = codec_names if sname == "fedgan" else ("none",)
+                specs_p = privacy_names if sname == "fedgan" else ("none",)
                 for cname in specs_c:
-                    spec, suite = experiment_spec(
-                        experiment, K=K, steps=steps, seed=seed,
-                        strategy=_strategy_for(sname, cname), log_every=0,
-                        eval_every=eval_every, data_mode="device",
-                        rounds_per_chunk=rounds_per_chunk)
-                    if verbose:
-                        print(f"[sweep] {experiment} K={K} strategy={sname} "
-                              f"codec={cname} ({spec.n_rounds} rounds x "
-                              f"{K} steps)", flush=True)
-                    res = spec.run_result()
-                    final = final_fd(suite, res.fed, res.state, seed=seed,
-                                     n=eval_n)
-                    acct = res.fed.comm_bytes_per_round(res.state)
-                    cell = SweepCell(experiment, K, sname, res.history,
-                                     res.evals, final, res.timings,
-                                     codec=cname,
-                                     bytes_per_round=int(
-                                         acct["strategy_bytes_per_round"]))
-                    for row in cell.rows():
-                        f.write(json.dumps(row) + "\n")
-                    f.flush()
-                    cells.append(cell)
+                    for pname in specs_p:
+                        strat, dp = _strategy_for(sname, cname, pname)
+                        spec, suite = experiment_spec(
+                            experiment, K=K, steps=steps, seed=seed,
+                            strategy=strat, dp=dp, log_every=0,
+                            eval_every=eval_every, data_mode="device",
+                            rounds_per_chunk=rounds_per_chunk)
+                        if verbose:
+                            print(f"[sweep] {experiment} K={K} "
+                                  f"strategy={sname} codec={cname} "
+                                  f"privacy={pname} ({spec.n_rounds} rounds "
+                                  f"x {K} steps)", flush=True)
+                        res = spec.run_result()
+                        final = final_fd(suite, res.fed, res.state,
+                                         seed=seed, n=eval_n)
+                        acct = res.fed.comm_bytes_per_round(res.state)
+                        cell = SweepCell(experiment, K, sname, res.history,
+                                         res.evals, final, res.timings,
+                                         codec=cname, privacy=pname,
+                                         bytes_per_round=int(
+                                             acct["strategy_bytes_per_round"]))
+                        for row in cell.rows():
+                            f.write(json.dumps(row) + "\n")
+                        f.flush()
+                        cells.append(cell)
     if verbose:
         print(f"[sweep] wrote {path}")
         print(summary_table(cells))
@@ -175,6 +226,10 @@ def main(argv: Any = None):
                     help="comma-separated wire codec specs to run on the "
                          "fedgan base at every K (e.g. 'none,int8,int4'; "
                          "'none' = uncompressed)")
+    ap.add_argument("--privacy", default="",
+                    help="comma-separated privacy axes to run on the fedgan "
+                         "base at every K: none | dp | secure | "
+                         "trimmed_mean | median")
     ap.add_argument("--steps", type=int, default=0,
                     help="local steps per run (0 = experiment default)")
     ap.add_argument("--eval-every", type=int, default=0,
@@ -198,8 +253,18 @@ def main(argv: Any = None):
                 get_codec(c)
             except ValueError as e:
                 ap.error(str(e))
+    privacy = [p for p in args.privacy.split(",") if p] or ["none"]
+    for p in privacy:
+        if p not in PRIVACY_AXES:
+            ap.error(f"unknown --privacy axis {p!r}; "
+                     f"known: {list(PRIVACY_AXES)}")
+        if p == "secure" and any(c != "none" for c in codecs):
+            ap.error("--privacy secure cannot ride a lossy --codecs wire "
+                     "(per-agent decode reveals the updates the masking "
+                     "hides); drop one")
     run_sweep(args.experiment, parse_sweep(args.sweep), strategy_names=names,
-              codec_names=codecs, steps=args.steps or None, seed=args.seed,
+              codec_names=codecs, privacy_names=privacy,
+              steps=args.steps or None, seed=args.seed,
               out_dir=args.out_dir, eval_every=args.eval_every,
               eval_n=args.eval_n, rounds_per_chunk=args.rounds_per_chunk)
 
