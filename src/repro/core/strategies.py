@@ -193,7 +193,9 @@ class FedAvgSync(SyncStrategy):
 
     ``secure_agg`` (a ``repro.privacy.SecureAgg``) routes the sync through
     ``collectives.masked_sync``: pairwise one-time-pad masking of the wire
-    image, bit-identical result.  It refuses to stack with anything that
+    image with the §3.1 weight folded in agent-side (weight-then-mask — a
+    sum-only server cannot weight per agent), bit-identical result.  It
+    refuses to stack with anything that
     would need per-agent server-side decoding (``codec``, ``sync_dtype``)
     or per-agent visibility (subsampling, robust reduces) — see
     docs/privacy.md for the full matrix.

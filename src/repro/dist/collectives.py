@@ -2,11 +2,12 @@
 
 FedGAN state is *agent-stacked*: every leaf carries a leading (P, A) grid
 which the mesh plans shard over ("pod", "data").  The averaging primitives
-here are written as plain einsums over those leading dims — under jit on the
-mesh, XLA lowers the weighted mean + broadcast of :func:`average_agents` to
-ONE all-reduce over ("pod","data") per leaf group, which *is* the paper's
-intermediary sync (eq. (2)+(3)) realised SPMD-style.  Off-mesh (CPU paper
-experiments) the same einsums are just math.
+here are written as plain multiply+reduce contractions over those leading
+dims — under jit on the mesh, XLA lowers the weighted mean + broadcast of
+:func:`average_agents` to ONE all-reduce over ("pod","data") per leaf
+group, which *is* the paper's intermediary sync (eq. (2)+(3)) realised
+SPMD-style.  Off-mesh (CPU paper experiments) the same contractions are
+just math.
 
 ``sync_dtype`` implements compressed sync: leaves are cast before the
 average and back after, so the all-reduce moves 2-byte (or fp8) words while
@@ -39,8 +40,15 @@ def agent_axes(mesh=None) -> tuple:
 
 def weighted_mean(x, weights):
     """The default reduce: weighted mean over the leading (P, A) dims —
-    the single einsum XLA lowers to one all-reduce per fusion group."""
-    return jnp.einsum("pa,pa...->...", weights.astype(x.dtype), x)
+    one broadcast-multiply + reduce-sum that XLA fuses to a single
+    all-reduce per fusion group.  The per-agent products are materialized
+    before the sum (rather than contracted in one einsum, whose eager
+    dot_general may FMA-accumulate) so the numerics are EXACTLY those of
+    the weight-then-mask secure path, whose wire carries the rounded
+    product w_i·x_i — what keeps :func:`masked_sync` bit-identical to the
+    plain average."""
+    w = weights.astype(x.dtype).reshape(weights.shape + (1,) * (x.ndim - 2))
+    return jnp.sum(w * x, axis=(0, 1))
 
 
 def average_agents(tree, weights, *, sync_dtype=None, reduce=None):
@@ -113,15 +121,29 @@ def _pairwise_masks(key, grid, shape):
     sum_{j<i} r_ji  (mod 2^32).  Summed over agents the r_ij terms
     telescope to EXACTLY zero (modular integer arithmetic — no float
     rounding), which is the cancellation real secure aggregation relies
-    on."""
+    on.
+
+    Each pair's mask is drawn from its own ``fold_in(key, pair_index)``
+    and folded into a running (B,) + shape accumulator inside a scan, so
+    peak memory is O(B·leaf) — never the (B, B)·leaf tensor a
+    materialized pair matrix would need (which OOMs at exactly the
+    fleet/model sizes secure aggregation targets)."""
     P, A = grid
     B = P * A
-    r = jax.random.bits(key, (B, B) + shape, jnp.uint32)
-    upper = (jnp.arange(B)[:, None] < jnp.arange(B)[None, :]
-             ).reshape((B, B) + (1,) * len(shape))
-    r = jnp.where(upper, r, jnp.uint32(0))
-    m = jnp.sum(r, axis=1, dtype=jnp.uint32) - jnp.sum(r, axis=0,
-                                                       dtype=jnp.uint32)
+    m = jnp.zeros((B,) + shape, jnp.uint32)
+    pairs = [(i, j) for i in range(B) for j in range(i + 1, B)]
+    if not pairs:
+        return m.reshape((P, A) + shape)
+    ii = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    jj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    def body(acc, pair):
+        i, j, p = pair
+        r = jax.random.bits(jax.random.fold_in(key, p), shape, jnp.uint32)
+        return acc.at[i].add(r).at[j].add(-r), None
+
+    m, _ = jax.lax.scan(body, m, (ii, jj, jnp.arange(len(pairs),
+                                                     dtype=jnp.uint32)))
     return m.reshape((P, A) + shape)
 
 
@@ -129,14 +151,19 @@ def masked_sync(tree, weights, key, *, sync_dtype=None, reduce=None):
     """Secure-aggregation-style sum: every agent's wire image is one-time-
     padded with pairwise PRG masks before it leaves the agent.
 
-    Per inexact leaf: agent (p, a)'s uplink payload is the uint32 bit
-    pattern of its values plus its net pairwise mask, mod 2^32 — uniformly
-    random to anyone without the pair seeds (an exact one-time pad; no
-    quantization of the data, so the recovered values are bit-identical).
-    At the reduce the masks cancel (they telescope to zero modularly, see
-    :func:`_pairwise_masks`) and the ordinary weighted average proceeds on
-    the recovered values — output bit-identical to :func:`average_agents`
-    on the same weights.
+    Per inexact leaf: agent (p, a) folds its public §3.1 weight into the
+    payload FIRST (weight-then-mask — a server that only ever sees masked
+    payloads cannot apply per-agent weights, since sum_i w_i·(x_i + m_i)
+    does not telescope unless the weights are uniform), then ships the
+    uint32 bit pattern of w_i·x_i plus its net pairwise mask, mod 2^32 —
+    uniformly random to anyone without the pair seeds (an exact one-time
+    pad; no quantization of the data, so the recovered values are
+    bit-identical).  At the reduce the masks cancel (they telescope to
+    zero modularly, see :func:`_pairwise_masks`) and the server's only
+    coherent aggregate — the plain UNWEIGHTED sum of the pre-weighted
+    payloads — proceeds on the recovered values.  The products and the
+    reduce order are identical to the weighted einsum, so the output is
+    bit-identical to :func:`average_agents` on the same weights.
 
     ``key`` must be fresh per round (derive via :func:`mask_pair_key` from
     the step counter — mask reuse breaks the pad).  The wire moves the same
@@ -144,6 +171,14 @@ def masked_sync(tree, weights, key, *, sync_dtype=None, reduce=None):
     accounting is unchanged; a lossy codec cannot ride this wire (the
     server would need per-agent decode — refuse upstream).
     """
+    if reduce is not None:
+        raise ValueError(
+            "masked_sync cannot apply a robust reduce: order statistics "
+            "need the individual per-agent values a secure sum hides")
+    if sync_dtype is not None:
+        raise ValueError(
+            "masked_sync pads the 32-bit wire image; a sync_dtype recast "
+            "would break the pad cancellation — drop one of the two")
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     outs = []
     for i, x in enumerate(leaves):
@@ -154,14 +189,15 @@ def masked_sync(tree, weights, key, *, sync_dtype=None, reduce=None):
             raise ValueError(
                 f"masked_sync pads the 32-bit wire image; got {x.dtype} — "
                 "cast the synced tree to float32 or drop secure_agg")
+        w = weights.astype(x.dtype).reshape(weights.shape
+                                            + (1,) * (x.ndim - 2))
         k_leaf = jax.random.fold_in(key, i)
         m = _pairwise_masks(k_leaf, x.shape[:2], x.shape[2:])
-        wire = jax.lax.bitcast_convert_type(x, jnp.uint32) + m  # uplink image
+        wire = jax.lax.bitcast_convert_type(x * w, jnp.uint32) + m  # uplink
         recovered = jax.lax.bitcast_convert_type(wire - m, x.dtype)
         outs.append(recovered)
     unmasked = jax.tree_util.tree_unflatten(treedef, outs)
-    return average_agents(unmasked, weights, sync_dtype=sync_dtype,
-                          reduce=reduce)
+    return average_agents(unmasked, jnp.ones_like(weights))
 
 
 def average_intra_pod(tree, weights):

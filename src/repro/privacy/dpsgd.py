@@ -8,11 +8,17 @@ Each agent's minibatch gradient is replaced by the Gaussian mechanism:
 where grad_i is the gradient of example i ALONE (a vmap over the batch
 axis, reusing ``repro.optim.clip_by_global_norm`` per sample), C is the
 clip norm, sigma the noise multiplier and n the per-agent batch size.
-Both players are clipped and noised independently at the same (C, sigma)
-— the discriminator is the privacy-critical player (it touches real
-data), but the generator update is a post-processing of the SAME batch
-through the discriminator in most GAN losses, so we pay for both rather
-than claim a free generator.
+Each step releases BOTH players' gradients computed on the same batch —
+the discriminator is the privacy-critical player (it touches real data),
+but the generator update is not a free post-processing in general, so
+the pair is treated as ONE release: the concatenated (G, D) per-example
+gradient is clipped JOINTLY to C (one ``clip_by_global_norm`` over both
+trees), making the per-example sensitivity of the released pair exactly
+C, and independent N(0, (sigma·C/n)^2) noise on every coordinate of the
+joint vector is then a single Gaussian mechanism at multiplier sigma.
+That is what lets :meth:`DPSGD.epsilon` compose ``steps`` single
+mechanisms — per-player clipping at C would have joint sensitivity
+sqrt(2)·C and silently understate the spend.
 
 Noise is keyed off the typed per-agent PRNG keys the runtime threads
 through ``_step`` (PR 4): every (agent, step, leaf) triple draws from its
@@ -30,7 +36,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.optim import clip_by_global_norm
+from repro.optim import clip_by_global_norm, global_norm
 from repro.privacy import accountant
 
 tmap = jax.tree_util.tree_map
@@ -40,14 +46,17 @@ tmap = jax.tree_util.tree_map
 class DPSGD:
     """Per-agent DP-SGD config — the privacy axis of ``FedGANConfig``.
 
-    ``clip``: per-example global-norm bound C (applied per player).
+    ``clip``: per-example global-norm bound C on the JOINT (G, D) gradient.
     ``noise_multiplier``: sigma; the noise std is sigma·C/n per coordinate
     of the MEAN gradient.  0 disables noise (clip-only — no epsilon).
     ``delta``: the delta at which :meth:`epsilon` reports the spend.
     ``sample_rate``: the accountant's subsampling rate q (the fraction of
-    an agent's examples in each step's batch); the mechanism itself sees
-    whatever batch the data pipeline delivers — q is accounting metadata,
-    so keep it consistent with batch_size / |R_i|.
+    an agent's examples in each step's batch).  The mechanism itself sees
+    whatever batch the data pipeline delivers, so the run path
+    (``repro.run.driver.check_dp_sample_rate``) refuses any q below the
+    pipeline's actual ``batch_size / min_i |R_i|`` — an optimistic q would
+    report an epsilon the mechanism does not deliver.  The default q = 1
+    is always conservative.
     """
 
     clip: float = 1.0
@@ -83,15 +92,19 @@ def per_example_grads(grad_fn, params, batch, rng, clip: float):
     example (a vmap over the leading batch axis, each example wrapped back
     into a batch of one so batch-mean losses are unchanged).  Returns
     ``(gd, gg, norms_d, norms_g, metrics)`` with a leading example axis on
-    everything; each per-example grad has global norm <= clip EXACTLY.
+    everything.  The clip is applied to the CONCATENATED (gd, gg) tree —
+    one ``clip_by_global_norm`` over both players — so each example's
+    joint released gradient has global norm <= clip EXACTLY (the single-
+    mechanism sensitivity the accountant assumes); ``norms_d``/``norms_g``
+    are the pre-clip per-player norms (the signal for tuning C).
     """
     n = jax.tree_util.tree_leaves(batch)[0].shape[0]
     ex_keys = jax.random.split(rng, n)
 
     def one(ex, k):
         gd, gg, m = grad_fn(params, tmap(lambda v: v[None], ex), k)
-        gd, nd = clip_by_global_norm(gd, clip)
-        gg, ng = clip_by_global_norm(gg, clip)
+        nd, ng = global_norm(gd), global_norm(gg)
+        (gd, gg), _ = clip_by_global_norm((gd, gg), clip)
         return gd, gg, nd, ng, m
 
     return jax.vmap(one)(batch, ex_keys)

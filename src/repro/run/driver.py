@@ -31,6 +31,7 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.data.federated import (DeviceFederatedData, FederatedData,
@@ -75,6 +76,43 @@ def _chunk_sizes(n_rounds: int, per_chunk: int, *cadences: int) -> list[int]:
     return sizes
 
 
+def _dp_data_shape(data):
+    """(batch_size, min per-agent dataset size) of the pipeline, or None
+    when the data object does not expose them."""
+    if isinstance(data, DeviceFederatedData):
+        return data.batch_size, int(np.asarray(data.sizes).min())
+    rounds = data.rounds if isinstance(data, StreamingFederatedData) else data
+    if isinstance(rounds, FederatedRounds):
+        n_min = min(jax.tree_util.tree_leaves(d)[0].shape[0]
+                    for d in rounds.agent_data)
+        return rounds.batch_size, n_min
+    return None
+
+
+def check_dp_sample_rate(dp, data):
+    """Refuse an accountant ``sample_rate`` the pipeline does not deliver.
+
+    Every step samples ``batch_size`` examples from each agent's local
+    dataset, so the worst-case per-example participation rate is
+    ``min(1, batch_size / min_i |R_i|)``.  A configured q below that makes
+    :meth:`DPSGD.epsilon` report a spend the mechanism does not achieve —
+    a silent privacy accounting failure, so this raises instead of
+    warning (mirroring the strategy refusal matrix)."""
+    shape = _dp_data_shape(data)
+    if shape is None:
+        return
+    batch_size, n_min = shape
+    q_actual = min(1.0, batch_size / max(n_min, 1))
+    if dp.sample_rate < q_actual - 1e-9:
+        raise ValueError(
+            f"DPSGD sample_rate={dp.sample_rate} understates the pipeline's "
+            f"participation rate: batch_size={batch_size} from a smallest "
+            f"agent dataset of {n_min} examples samples at rate "
+            f"{q_actual:.6g} per step, so the accountant's epsilon would "
+            "not be delivered — set sample_rate >= batch_size / min |R_i| "
+            "(or leave the conservative default of 1.0)")
+
+
 @dataclasses.dataclass
 class RoundDriver:
     """Drives ``n_rounds`` FedGAN rounds over a :class:`FederatedData`.
@@ -114,6 +152,9 @@ class RoundDriver:
         init from an independent split of ``rng`` — pass one explicitly to
         continue a run (or to control the init key separately, as the
         RunSpec shim does for legacy parity)."""
+        dp = getattr(self.fed.cfg, "dp", None)
+        if dp is not None:
+            check_dp_sample_rate(dp, self.data)
         if state is None:
             rng, init_rng = jax.random.split(rng)
             state = self.fed.init_state(init_rng)

@@ -303,6 +303,30 @@ def test_per_example_grads_clipped_to_c_exactly():
     assert float(jnp.max(nd)) > C
 
 
+def test_per_example_joint_grad_clipped_to_c_exactly():
+    """The accountant composes ONE Gaussian mechanism per step, which is
+    only honest if the per-example sensitivity of the released (G, D) PAIR
+    is C — i.e. the joint concatenated gradient is clipped to C, not each
+    player separately (joint sensitivity sqrt(2)*C, a 2x-understated
+    epsilon)."""
+    fed = _fed()
+    params = tmap(lambda x: x[0, 0],
+                  fed.init_state(jax.random.key(0))["params"])
+    batch = {"x": 50.0 * jax.random.normal(jax.random.key(1), (8, 3))}
+    C = 0.37
+    gd, gg, nd, ng, _ = per_example_grads(fed._local_grads, params, batch,
+                                          jax.random.key(2), C)
+    for i in range(8):
+        joint = (tmap(lambda v: v[i], gd), tmap(lambda v: v[i], gg))
+        jn = float(global_norm(joint))
+        assert jn <= C * (1 + 1e-6), (i, jn)
+        # pre-clip joint norm >> C here, so the clip must be TIGHT at C:
+        # a per-player clip would leave the joint norm near sqrt(2)*C
+        pre = math.hypot(float(nd[i]), float(ng[i]))
+        if pre > C:
+            assert jn == pytest.approx(C, rel=1e-5), (i, jn)
+
+
 def test_dp_noise_bit_reproducible_and_distinct_across_agents():
     fed = _fed(dp=DPSGD(clip=1.0, noise_multiplier=1.0))
     params = tmap(lambda x: x[0, 0], fed.init_state(jax.random.key(0))["params"])
@@ -383,6 +407,38 @@ def test_accountant_edges_and_validation():
     with pytest.raises(ValueError, match="clip"):
         FedGANConfig(agent_grid=(1, 4), sync_interval=4,
                      dp=DPSGD(clip=-1.0)).validate()
+
+
+def test_driver_refuses_understated_sample_rate():
+    """The accountant's q is only honest if it covers the participation
+    rate the pipeline actually delivers (batch_size / |R_i|): a smaller q
+    reports an epsilon the mechanism does not achieve, so the run path
+    refuses it loudly instead of relying on a docstring caveat."""
+    from repro.data.federated import (DeviceFederatedData,
+                                      StreamingFederatedData)
+    from repro.run.driver import RoundDriver, check_dp_sample_rate
+
+    agent_data = [{"x": jax.random.normal(jax.random.key(i), (16, 3))}
+                  for i in range(4)]
+    data = StreamingFederatedData.from_agent_data(agent_data, (1, 4),
+                                                  batch_size=8,
+                                                  sync_interval=4)
+    # pipeline rate is 8/16 = 0.5: q below that must refuse...
+    bad = _fed(dp=DPSGD(noise_multiplier=1.0, sample_rate=0.1))
+    with pytest.raises(ValueError, match="understates"):
+        RoundDriver(bad, data, n_rounds=1, log_every=0,
+                    verbose=False).run(jax.random.key(0))
+    # ...while an honest (or conservative) q runs
+    ok = _fed(dp=DPSGD(noise_multiplier=1.0, sample_rate=0.5))
+    res = RoundDriver(ok, data, n_rounds=1, log_every=0,
+                      verbose=False).run(jax.random.key(0))
+    assert np.isfinite(res.timings["dp_epsilon"])
+    # the device-resident pipeline is checked through its true shard sizes
+    dev = DeviceFederatedData.from_agent_data(agent_data, (1, 4),
+                                              batch_size=8)
+    with pytest.raises(ValueError, match="understates"):
+        check_dp_sample_rate(DPSGD(sample_rate=0.25), dev)
+    check_dp_sample_rate(DPSGD(sample_rate=1.0), dev)
 
 
 def test_driver_surfaces_dp_epsilon():
@@ -498,6 +554,59 @@ def test_secure_refusal_matrix():
     with pytest.raises(ValueError, match="32-bit wire image"):
         collectives.masked_sync({"h": jnp.ones((1, 2, 3), jnp.bfloat16)},
                                 jnp.full((1, 2), 0.5), jax.random.key(0))
+    # ...and the combinations the strategy layer also refuses (defense in
+    # depth for callers that bypass validate): a robust reduce needs the
+    # per-agent values the sum hides; a sync_dtype recast breaks the pad
+    tree = {"h": jnp.ones((1, 2, 3), jnp.float32)}
+    w = jnp.full((1, 2), 0.5)
+    with pytest.raises(ValueError, match="secure sum hides"):
+        collectives.masked_sync(
+            tree, w, jax.random.key(0),
+            reduce=collectives.make_robust_reduce("median"))
+    with pytest.raises(ValueError, match="pad cancellation"):
+        collectives.masked_sync(tree, w, jax.random.key(0),
+                                sync_dtype=jnp.float32)
+
+
+def test_masked_sync_weights_ride_the_payload():
+    """Weight-then-mask: the uplink wire image is the masked bit pattern
+    of w_i*x_i, NOT of x_i — a server that only ever sees masked payloads
+    cannot apply per-agent weights, so the agents must fold them in before
+    masking.  (The recovered aggregate is then a plain unweighted sum.)"""
+    x = jnp.full((1, 2, 4), 2.0, jnp.float32)
+    w = jnp.asarray([[0.75, 0.25]])
+    key = collectives.mask_pair_key(jax.random.key(0), 3)
+    k_leaf = jax.random.fold_in(key, 0)
+    m = collectives._pairwise_masks(k_leaf, (1, 2), (4,))
+    wire_unweighted = jax.lax.bitcast_convert_type(x, jnp.uint32) + m
+    wire_weighted = jax.lax.bitcast_convert_type(
+        x * w[..., None], jnp.uint32) + m
+    # reconstruct what masked_sync ships by re-deriving its wire image:
+    # unmasking the weighted wire gives w_i*x_i exactly
+    rec = jax.lax.bitcast_convert_type(wire_weighted - m, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(rec),
+                                  np.asarray(x * w[..., None]))
+    assert not (np.asarray(wire_weighted) == np.asarray(wire_unweighted)).all()
+    # and the full sync still equals the weighted average bit-exactly
+    out = collectives.masked_sync({"p": x}, w, key)
+    np.testing.assert_array_equal(
+        np.asarray(out["p"]),
+        np.asarray(collectives.average_agents({"p": x}, w)["p"]))
+
+
+def test_pairwise_masks_memory_is_linear_in_agents():
+    """The mask accumulator must never materialize the (B, B, leaf) pair
+    tensor — the jaxpr's largest intermediate stays O(B * leaf)."""
+    B, leaf = 8, 32
+    jaxpr = jax.make_jaxpr(
+        lambda k: collectives._pairwise_masks(k, (1, B), (leaf,)))(
+            jax.random.key(0))
+    biggest = max(
+        (int(np.prod(v.aval.shape)) for eqn in jaxpr.jaxpr.eqns
+         for v in list(eqn.outvars) + list(eqn.invars)
+         if hasattr(v, "aval") and getattr(v.aval, "shape", None)),
+        default=0)
+    assert biggest <= 4 * B * leaf, biggest  # O(B*leaf), never B^2*leaf
 
 
 # ---------------------------------------------------------------------------
