@@ -1,9 +1,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench bench-dryrun bench-serve bench-rounds \
-        bench-comm bench-privacy sweep sweep-comm sweep-privacy docs-check \
-        quickstart serve-example strategies-parity
+.PHONY: test test-fast lint analyze bench bench-dryrun bench-serve \
+        bench-rounds bench-comm bench-privacy sweep sweep-comm sweep-privacy \
+        docs-check quickstart serve-example strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -14,11 +14,21 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q --ignore=tests/test_sharding_launch.py
 
-# No linter wheel ships in the container: byte-compile everything and verify
-# the public entry points import (catches syntax + import drift cheaply).
+# No linter wheel ships in the container: byte-compile everything, verify
+# the public entry points import (catches syntax + import drift cheaply),
+# then run the repo-specific AST lint (host-sync, kernel/ref pairing,
+# refusal-matrix, catalogue drift) against the committed baseline.
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
 	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint, repro.run, repro.run.experiments, repro.data, repro.evals, repro.comm, repro.kernels.qpack.ops"
+	$(PY) -m repro.analysis --rules lint
+
+# The full two-layer static-analysis pass: AST lint + jaxpr trace audit +
+# the strategy x codec wire matrix (compiles every cell on an emulated
+# 8-device mesh — minutes, not seconds).  Fails on any non-baseline
+# finding; report lands in analysis_report.json.
+analyze:
+	$(PY) -m repro.analysis --rules all --out analysis_report.json
 
 # Execute every runnable snippet in docs/*.md (the docs-drift gate).
 docs-check:

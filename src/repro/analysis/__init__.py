@@ -1,0 +1,22 @@
+"""repro.analysis — two-layer static analysis for the FedGAN repro.
+
+Layer 1 (``trace``/``hotpath``) audits the *built artifacts*: jaxprs of
+the round functions and post-SPMD HLO of every strategy x codec cell.
+Layer 2 (``lint``) audits the *source and docs*: host-sync calls in hot
+paths, kernel/ref pairing, refusal-matrix and catalogue drift.
+
+CLI: ``python -m repro.analysis [--json] [--rules ...]``; the committed
+``baseline.json`` makes the gate "zero NEW findings".  See
+docs/analysis.md.
+
+This module stays jax-free so the lint layer works in any environment.
+"""
+from repro.analysis.findings import (Finding, baseline_path, filter_suppressed,
+                                     load_baseline, new_findings,
+                                     write_baseline)
+from repro.analysis.lint import LintContext, run_lint
+
+__all__ = [
+    "Finding", "LintContext", "baseline_path", "filter_suppressed",
+    "load_baseline", "new_findings", "run_lint", "write_baseline",
+]

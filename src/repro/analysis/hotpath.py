@@ -1,0 +1,286 @@
+"""Layer 1b: post-SPMD wire auditor — the strategy x codec matrix.
+
+PR 2 checked ONE cell (fedgan + bf16) with a one-off HLO byte assertion.
+This module generalizes it: every registered strategy x {none, int8,
+int4} (+ the fedgan bf16 dtype-cast cell) is built with
+``launch.steps.build_train_round`` on the 8-device test mesh, compiled,
+and its post-SPMD collectives audited via
+``launch.hlo_analysis.collective_records``:
+
+* ``wire-dtype`` / widening — no agent-axis collective may carry an
+  operand wider than f32 (4 B): an f64 leak on the wire path doubles the
+  §3.2 budget silently.
+* codec cells — codecs decode locally per agent, so the cross-agent
+  reduce still moves decoded f32: no once-per-round agent-axis operand
+  may be NARROWER than 4 B (an s8/u8/s4/u4/bf16 operand means the encode
+  escaped onto the wire), while the *billed* ``strategy.bytes_per_round``
+  must be strictly LESS than the none cell's (equality means the codec
+  is silently ignored).  Raw byte totals are reported per cell but not
+  gated — XLA fuses the gather/reduce differently per cell (the median
+  sort path pads differently under codec decode ops), so byte equality
+  with the none cell is compiler noise, not a semantic invariant.
+* bf16 cell — the dominant once-per-round agent-axis collective must
+  actually carry bf16 operands (the declared cast reached the wire).
+
+Cells that the design space REFUSES (``TypeError`` at construction,
+``ValueError`` from ``validate``) are recorded as ``refused`` and count
+as passing — the refusal matrix rule checks those separately.
+
+Needs >= 8 XLA devices: the CLI sets
+``--xla_force_host_platform_device_count=8`` before importing jax; tests
+run this in a subprocess.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import os
+
+from repro.analysis.findings import Finding, filter_suppressed
+from repro.analysis.lint import repo_root_from_package
+
+WIRE_RULE = "wire-dtype"
+
+CODEC_CELLS = ("none", "int8", "int4")
+MESH_SHAPE = (4, 2)           # ("data", "model") -> 4 agents, TP-2
+_F32_BYTES = 4
+
+
+@dataclasses.dataclass
+class WireCell:
+    strategy: str             # registry name (canonical, first alias)
+    cls_name: str
+    codec: str                # none | int8 | int4 | bf16
+    status: str               # ok | refused
+    reason: str = ""
+    agent_bytes_once: int = 0  # non-loop agent-axis collective bytes
+    billed: int = 0           # strategy.bytes_per_round
+    agent_records: tuple = ()
+
+
+def _tiny_cfg():
+    import jax.numpy as jnp
+
+    from repro.models.config import ArchConfig, ShapeConfig
+    cfg = ArchConfig(name="t", family="dense", num_layers=1, d_model=32,
+                     num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=128,
+                     dtype=jnp.float32, remat=False,
+                     disc_layers=1, disc_d_model=32, disc_heads=2)
+    shape = ShapeConfig("t", 16, 8, "train")   # seq 16, global batch 8
+    return cfg, shape
+
+
+def _canonical_strategies():
+    """[(canonical registry name, cls)] — classes deduped (ps_fedgan and
+    partial_sharing share PartialSharing), first alias wins."""
+    from repro.core.strategies import STRATEGIES
+    out, seen = [], set()
+    for name, cls in STRATEGIES.items():
+        if cls not in seen:
+            seen.add(cls)
+            out.append((name, cls))
+    return out
+
+
+def _make_strategy(cls, codec: str):
+    """May raise TypeError (field absent) / ValueError — a refused cell."""
+    import jax.numpy as jnp
+
+    from repro.comm.codecs import CODECS
+    kwargs = {}
+    if cls.__name__ == "Hierarchical":
+        kwargs["intra_interval"] = 1
+    if codec == "bf16":
+        kwargs["sync_dtype"] = jnp.bfloat16
+    elif codec != "none":
+        kwargs["codec"] = CODECS[codec]()
+    return cls(**kwargs)
+
+
+def _is_agent_sig(sig: str, agent_size: int) -> bool:
+    """Transposed (non-minor-most) replica groups spanning the full agent
+    (pod*data) extent — the cross-agent wire."""
+    return sig.endswith(("T", "E")) and (sig.rstrip("TE") or "0").isdigit() \
+        and int(sig.rstrip("TE")) == agent_size
+
+
+def _dtype_bytes(dt: str) -> int:
+    from repro.launch.hlo_analysis import _DTYPE_BYTES, _SUB_BYTE_ELEMS
+    if dt in _SUB_BYTE_ELEMS:
+        return 1   # sub-byte: never "wider than f32"
+    return _DTYPE_BYTES.get(dt, 4)
+
+
+def _class_anchor(cls, root: str):
+    try:
+        path = inspect.getsourcefile(cls)
+        line = inspect.getsourcelines(cls)[1]
+        rel = os.path.relpath(os.path.abspath(path), root)
+        if not rel.startswith(".."):
+            return rel.replace(os.sep, "/"), line
+    except (OSError, TypeError, ValueError):
+        pass
+    return "src/repro/core/strategies.py", 1
+
+
+def _record_anchor(rec, cls, root: str):
+    if rec is not None and rec.source_file:
+        rel = os.path.relpath(os.path.abspath(rec.source_file), root)
+        if not rel.startswith(".."):
+            return rel.replace(os.sep, "/"), rec.source_line
+    return _class_anchor(cls, root)
+
+
+def _build_cell(name: str, cls, codec: str, mesh, cfg, shape, K: int):
+    """Build + compile one cell; returns a WireCell."""
+    import jax
+
+    from repro.launch.hlo_analysis import collective_records
+    from repro.launch.mesh import mesh_dims
+    from repro.launch.steps import build_train_round
+
+    cell = WireCell(strategy=name, cls_name=cls.__name__, codec=codec,
+                    status="ok")
+    try:
+        strategy = _make_strategy(cls, codec)
+        built = build_train_round(cfg, shape, mesh, K=K, strategy=strategy)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                             out_shardings=built.out_shardings)
+            compiled = jitted.lower(*built.input_sds).compile()
+        recs = collective_records(compiled.as_text())
+    except (TypeError, ValueError) as e:
+        cell.status = "refused"
+        cell.reason = f"{type(e).__name__}: {e}"
+        return cell
+
+    dims = mesh_dims(mesh)
+    agent_size = dims.get("pod", 1) * dims["data"]
+    agent = tuple(r for r in recs
+                  if _is_agent_sig(r.group_signature, agent_size))
+    cell.agent_records = agent
+    cell.agent_bytes_once = sum(r.bytes for r in agent if not r.in_loop)
+
+    fed_cfg = _fed_cfg_for(mesh, K, strategy)
+    params = built.input_sds[0]["params"]
+    cell.billed = int(strategy.bytes_per_round(fed_cfg, params))
+    return cell
+
+
+def _fed_cfg_for(mesh, K: int, strategy):
+    from repro.core.fedgan import FedGANConfig
+    from repro.launch.mesh import mesh_dims
+    dims = mesh_dims(mesh)
+    return FedGANConfig(agent_grid=(dims.get("pod", 1), dims["data"]),
+                        sync_interval=K, strategy=strategy)
+
+
+def run_wire_matrix(root: str | None = None, *, names=None, codecs=None,
+                    K: int = 2):
+    """Returns ``(cells, findings)``; findings are suppression-filtered.
+    ``names``/``codecs`` restrict the matrix (test sharding)."""
+    import repro.dist  # noqa: F401  (installs the jax.set_mesh shim)
+    from repro.launch.mesh import make_test_mesh
+
+    root = root or repo_root_from_package()
+    mesh = make_test_mesh(MESH_SHAPE, ("data", "model"))
+    cfg, shape = _tiny_cfg()
+    codec_cells = tuple(codecs) if codecs else CODEC_CELLS
+
+    cells: list = []
+    findings: list = []
+    for name, cls in _canonical_strategies():
+        if names and name not in names:
+            continue
+        per_codec = {}
+        for codec in codec_cells:
+            cell = _build_cell(name, cls, codec, mesh, cfg, shape, K)
+            per_codec[codec] = cell
+            cells.append(cell)
+        if name == "fedgan" and (not codecs or "bf16" in codecs):
+            cell = _build_cell(name, cls, "bf16", mesh, cfg, shape, K)
+            per_codec["bf16"] = cell
+            cells.append(cell)
+        findings.extend(_cell_findings(per_codec, cls, root))
+
+    findings.sort(key=lambda f: (f.file, f.line, f.message))
+    return cells, filter_suppressed(findings, root)
+
+
+def _cell_findings(per_codec: dict, cls, root: str) -> list:
+    findings = []
+    none_cell = per_codec.get("none")
+
+    for codec, cell in per_codec.items():
+        if cell.status != "ok":
+            continue
+        # (1) widening: no agent-axis operand wider than f32
+        for rec in cell.agent_records:
+            wide = [dt for dt in rec.operand_dtypes
+                    if _dtype_bytes(dt) > _F32_BYTES]
+            if wide:
+                f, l = _record_anchor(rec, cls, root)
+                findings.append(Finding(
+                    rule=WIRE_RULE, file=f, line=l,
+                    message=f"[{cell.strategy}+{codec}] agent-axis "
+                            f"{rec.op} carries {'/'.join(wide)} operands — "
+                            "wider than the declared f32 wire (silent "
+                            "widening doubles the §3.2 bytes)"))
+
+        if codec in ("int8", "int4") and none_cell is not None \
+                and none_cell.status == "ok":
+            # (2) codecs decode locally: the quantized image must never
+            # cross the agent axis — a narrow operand the none cell does
+            # not also carry means the encode escaped onto the wire
+            # before the decode (pre-existing narrow traffic, e.g. a
+            # pred subsampling mask, is the strategy's own wire)
+            allowed = {dt for r in none_cell.agent_records
+                       for dt in r.operand_dtypes}
+            for rec in cell.agent_records:
+                if rec.in_loop:
+                    continue
+                narrow = [dt for dt in rec.operand_dtypes
+                          if _dtype_bytes(dt) < _F32_BYTES
+                          and dt not in allowed]
+                if narrow:
+                    f, l = _record_anchor(rec, cls, root)
+                    findings.append(Finding(
+                        rule=WIRE_RULE, file=f, line=l,
+                        message=f"[{cell.strategy}+{codec}] agent-axis "
+                                f"{rec.op} carries {'/'.join(narrow)} "
+                                "operands — the codec's encoded image "
+                                "crossed the agent axis (codecs must "
+                                "encode/decode locally; the wire moves "
+                                "decoded f32)"))
+            # (3) billed budget must actually shrink
+            if none_cell.billed and cell.billed >= none_cell.billed:
+                f, l = _class_anchor(cls, root)
+                findings.append(Finding(
+                    rule=WIRE_RULE, file=f, line=l,
+                    message=f"[{cell.strategy}+{codec}] billed "
+                            f"bytes_per_round {cell.billed} is not < the "
+                            f"none cell's {none_cell.billed} — the codec "
+                            "is being silently ignored in the §3.2 budget"))
+
+        if codec == "bf16":
+            once = [r for r in cell.agent_records if not r.in_loop]
+            if not once:
+                f, l = _class_anchor(cls, root)
+                findings.append(Finding(
+                    rule=WIRE_RULE, file=f, line=l,
+                    message=f"[{cell.strategy}+bf16] no once-per-round "
+                            "agent-axis collective found — the sync "
+                            "vanished from the compiled round"))
+            else:
+                biggest = max(once, key=lambda r: r.bytes)
+                if any(dt != "bf16" for dt in biggest.operand_dtypes):
+                    f, l = _record_anchor(biggest, cls, root)
+                    findings.append(Finding(
+                        rule=WIRE_RULE, file=f, line=l,
+                        message=f"[{cell.strategy}+bf16] dominant "
+                                f"once-per-round agent-axis {biggest.op} "
+                                "carries "
+                                f"{'/'.join(biggest.operand_dtypes)} "
+                                "operands, not bf16 — the declared "
+                                "sync_dtype cast never reached the wire"))
+    return findings

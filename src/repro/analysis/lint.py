@@ -1,0 +1,70 @@
+"""Layer 2: repo-specific AST/doc lint.
+
+The engine is deliberately tiny: a rule is a function
+``rule(ctx: LintContext) -> list[Finding]`` registered in
+``repro.analysis.rules.LINT_RULES``.  All paths come from the
+``LintContext`` so the planted-violation fixtures under
+``tests/fixtures/analysis/`` can point the same rules at mini-trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.analysis.findings import Finding, filter_suppressed
+
+# Modules inside the hot packages that are *documented* host-side code
+# (diagnostics and accounting that run between rounds, never under jit);
+# see docs/analysis.md for the rationale of each entry.
+HOST_SIDE_MODULES = (
+    "core/convergence.py",    # Lemma-1/2 diagnostics: host loop over agents
+    "run/evals.py",           # eval harness: deliberate device->host fetch
+    "privacy/accountant.py",  # closed-form RDP accountant: pure host math
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintContext:
+    """Where the rules look.  ``root`` anchors the repo-relative paths in
+    findings; ``src`` is the ``repro`` package directory itself."""
+
+    root: str                 # repo root (for relative paths + suppressions)
+    src: str                  # .../src/repro
+    docs: str                 # .../docs
+    tests: str                # .../tests
+    hot_packages: tuple = ("core", "run", "dist", "comm", "privacy")
+    host_side_modules: tuple = HOST_SIDE_MODULES
+
+    @classmethod
+    def for_repo(cls, root: str) -> "LintContext":
+        return cls(root=root,
+                   src=os.path.join(root, "src", "repro"),
+                   docs=os.path.join(root, "docs"),
+                   tests=os.path.join(root, "tests"))
+
+    def rel(self, path: str) -> str:
+        return os.path.relpath(path, self.root).replace(os.sep, "/")
+
+    def finding(self, rule: str, path: str, line: int, message: str,
+                severity: str = "error") -> Finding:
+        return Finding(rule=rule, file=self.rel(path), line=line,
+                       message=message, severity=severity)
+
+
+def repo_root_from_package() -> str:
+    """<root>/src/repro/analysis/lint.py -> <root>."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def run_lint(ctx: LintContext | None = None, rules=None) -> list:
+    """Run the lint rules (all by default); suppression comments applied."""
+    from repro.analysis.rules import LINT_RULES
+    ctx = ctx or LintContext.for_repo(repo_root_from_package())
+    findings = []
+    for name, rule in LINT_RULES.items():
+        if rules is not None and name not in rules:
+            continue
+        findings.extend(rule(ctx))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return filter_suppressed(findings, ctx.root)

@@ -1,0 +1,88 @@
+"""host-sync: no device->host synchronization in hot-path modules.
+
+``float(traced)``, ``.item()``, ``np.asarray(traced)`` and
+``jax.device_get`` all block until the device catches up.  Inside the
+round path they either crash the trace (under jit) or — worse — silently
+serialize the async dispatch pipeline when called on the results between
+dispatches (the PR 4 incident: an eager per-round metric fetch hid the
+entire round latency win).  ``jnp.asarray`` is fine (stays on device);
+``float(<literal>)`` is fine (pure host constant).
+
+Documented host-side modules (``LintContext.host_side_modules``) are
+skipped wholesale; deliberate sites in otherwise-hot modules carry an
+``# analysis: allow(host-sync)`` comment.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+RULE = "host-sync"
+
+_NP_ALIASES = ("np", "numpy", "onp")
+
+
+def _is_constant(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub, ast.UAdd)):
+        return _is_constant(node.operand)
+    return False
+
+
+def _flag_call(node: ast.Call) -> str | None:
+    fn = node.func
+    if isinstance(fn, ast.Name) and fn.id == "float":
+        if node.args and not _is_constant(node.args[0]):
+            return ("float() forces a device->host sync on a traced/device "
+                    "value; keep it as a jnp scalar (or move this to a "
+                    "documented host-side module)")
+        return None
+    if isinstance(fn, ast.Attribute):
+        if fn.attr == "item" and not node.args and not node.keywords:
+            return (".item() forces a device->host sync; keep the value on "
+                    "device or fetch it once at the end of the run")
+        base = fn.value
+        if (fn.attr == "asarray" and isinstance(base, ast.Name)
+                and base.id in _NP_ALIASES):
+            return ("np.asarray on a device value copies it to host; use "
+                    "jnp.asarray (stays on device) or move this off the "
+                    "hot path")
+        if (fn.attr == "device_get" and isinstance(base, ast.Name)
+                and base.id == "jax"):
+            return ("jax.device_get blocks on the device; batch the fetch "
+                    "at the end of the run instead of per round/step")
+    return None
+
+
+def check_host_sync(ctx) -> list:
+    findings = []
+    for pkg in ctx.hot_packages:
+        pkg_dir = os.path.join(ctx.src, pkg)
+        if not os.path.isdir(pkg_dir):
+            continue
+        for dirpath, _, names in sorted(os.walk(pkg_dir)):
+            for name in sorted(names):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                mod = os.path.relpath(path, ctx.src).replace(os.sep, "/")
+                if mod in ctx.host_side_modules:
+                    continue
+                findings.extend(_scan_file(ctx, path))
+    return findings
+
+
+def _scan_file(ctx, path: str) -> list:
+    try:
+        with open(path, encoding="utf-8") as f:
+            tree = ast.parse(f.read(), filename=path)
+    except (OSError, SyntaxError):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            msg = _flag_call(node)
+            if msg:
+                out.append(ctx.finding(RULE, path, node.lineno, msg))
+    return out

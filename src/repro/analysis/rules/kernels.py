@@ -1,0 +1,52 @@
+"""kernel-ref-pair: every Pallas kernel ships its oracle and a parity test.
+
+``kernels/<name>/kernel.py`` without a sibling ``ref.py`` has no
+bit-parity ground truth; a pair without a test referencing both is an
+oracle nobody consults.  The reference pattern in this repo:
+``tests/test_kernels.py`` / ``tests/test_comm.py`` import
+``repro.kernels.<name>.{ops,ref}`` and assert bit-identity.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+
+RULE = "kernel-ref-pair"
+
+
+def _test_texts(tests_dir: str) -> list:
+    out = []
+    for path in sorted(glob.glob(os.path.join(tests_dir, "**", "*.py"),
+                                 recursive=True)):
+        try:
+            with open(path, encoding="utf-8") as f:
+                out.append(f.read())
+        except OSError:
+            pass
+    return out
+
+
+def check_kernel_ref_pairs(ctx) -> list:
+    kernels_dir = os.path.join(ctx.src, "kernels")
+    if not os.path.isdir(kernels_dir):
+        return []
+    texts = _test_texts(ctx.tests)
+    findings = []
+    for kpath in sorted(glob.glob(os.path.join(kernels_dir, "*", "kernel.py"))):
+        kdir = os.path.dirname(kpath)
+        kname = os.path.basename(kdir)
+        if not os.path.exists(os.path.join(kdir, "ref.py")):
+            findings.append(ctx.finding(
+                RULE, kpath, 1,
+                f"kernels/{kname}/kernel.py has no sibling ref.py — every "
+                "kernel needs a pure-jnp oracle for bit-parity testing"))
+            continue
+        mod_re = re.compile(rf"kernels\.{re.escape(kname)}\b")
+        ref_re = re.compile(r"\bref\b")
+        if not any(mod_re.search(t) and ref_re.search(t) for t in texts):
+            findings.append(ctx.finding(
+                RULE, kpath, 1,
+                f"no test references both kernels.{kname} and its ref "
+                "oracle — add a bit-parity test (see tests/test_kernels.py)"))
+    return findings

@@ -43,14 +43,14 @@ def _roofline(flops, hbm_bytes, coll_bytes_by_axis):
 def run_pair(arch: str, shape_name: str, *, multi_pod: bool, plan: str = "agents-data",
              mode: str = "fedgan", K: int = 20, ring_cache: bool = False,
              fsdp: bool = False, sync_dtype: str = "", intra: int = 0,
-             save_hlo: str = "") -> dict:
+             save_hlo: str = "", analyze: bool = False) -> dict:
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config, get_shape, pair_supported
     from repro.launch.hlo_analysis import collective_bytes
     from repro.launch.mesh import make_production_mesh, mesh_dims
-    from repro.launch.steps import PLANS, build_step
+    from repro.launch.steps import PLANS, build_step, round_donation
 
     cfg = get_config(arch)
     shape = get_shape(shape_name)
@@ -75,9 +75,16 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool, plan: str = "agents
 
     t0 = time.time()
     built = build_step(cfg, shape, mesh, **kw)
+    if analyze:
+        from repro.analysis.trace import audit_built
+        rec["analysis"] = [f.to_json() for f in audit_built(
+            built, donate_argnums=round_donation(built))]
     with jax.set_mesh(mesh):
+        # donate the round state — without this the compiled module keeps
+        # two copies of params+opt live (alias_size_in_bytes was 0)
         jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
-                         out_shardings=built.out_shardings)
+                         out_shardings=built.out_shardings,
+                         donate_argnums=round_donation(built))
         lowered = jitted.lower(*built.input_sds)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -147,6 +154,9 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--analyze", action="store_true",
+                    help="run the repro.analysis trace auditor on each "
+                         "built step and record findings in the JSON")
     args = ap.parse_args()
 
     from repro.configs import list_archs
@@ -173,7 +183,8 @@ def main():
             rec = run_pair(arch, shape, multi_pod=mp, plan=args.plan,
                            mode=args.mode, K=args.K, ring_cache=args.ring_cache,
                            fsdp=args.fsdp, sync_dtype=args.sync_dtype,
-                           intra=args.intra, save_hlo=args.save_hlo)
+                           intra=args.intra, save_hlo=args.save_hlo,
+                           analyze=args.analyze)
         except Exception as e:  # record failures — they are bugs to fix
             rec = {"arch": arch, "shape": shape, "multi_pod": mp,
                    "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -30,6 +30,10 @@ _DTYPE_BYTES = {
     "s32": 4, "u32": 4, "f32": 4,
     "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
 }
+# sub-byte types: bytes = ceil(elems / elems-per-byte), NOT elems * 1 —
+# a u4[1000] buffer is 500 bytes, and counting it at 4 (the unknown-type
+# fallback) overstated int4 wire traffic 8x.
+_SUB_BYTE_ELEMS = {"s4": 2, "u4": 2, "s2": 4, "u2": 4}
 
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                   "collective-permute")
@@ -53,6 +57,9 @@ def _shape_bytes(type_str: str, dims_str: str) -> int:
     for d in dims_str.split(","):
         if d:
             n *= int(d)
+    if type_str in _SUB_BYTE_ELEMS:
+        per_byte = _SUB_BYTE_ELEMS[type_str]
+        return (n + per_byte - 1) // per_byte
     return n * _DTYPE_BYTES.get(type_str, 4)
 
 
@@ -254,7 +261,11 @@ def _shapes_bytes(shapes) -> int:
         n = 1
         for d in dims:
             n *= d
-        total += n * _DTYPE_BYTES.get(dt, 4)
+        if dt in _SUB_BYTE_ELEMS:
+            per_byte = _SUB_BYTE_ELEMS[dt]
+            total += (n + per_byte - 1) // per_byte
+        else:
+            total += n * _DTYPE_BYTES.get(dt, 4)
     return total
 
 
@@ -361,3 +372,98 @@ def program_costs(hlo_text: str) -> dict:
         return {"flops": 0, "hbm_bytes": 0}
     f, b = analyze(entry)
     return {"flops": f, "hbm_bytes": b}
+
+
+# ---------------------------------------------------------------------------
+# Per-collective records (the repro.analysis wire auditor's substrate)
+# ---------------------------------------------------------------------------
+
+_META_SRC_RE = re.compile(r'source_file="([^"]+)"')
+_META_LINE_RE = re.compile(r"source_line=(\d+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One collective op occurrence in the post-SPMD module.
+
+    Unlike :func:`collective_bytes` (aggregated, trip-multiplied), records
+    enumerate each op ONCE with its structural position (``in_loop``) and
+    its OPERAND dtypes — which is what dtype-widening audits need: an f32
+    operand feeding an agent-axis all-reduce in a bf16-wire build is the
+    bug, regardless of trip counts."""
+
+    op: str
+    bytes: int                 # output bytes (wire-bytes proxy, per device)
+    group_signature: str       # _group_size() signature, e.g. '4', '2T'
+    operand_dtypes: tuple      # HLO type strings of the operands, in order
+    in_loop: bool              # inside a while (K-scan) body?
+    computation: str           # enclosing HLO computation name
+    source_file: str = ""      # from op metadata, when the compiler kept it
+    source_line: int = 0
+
+
+def _line_record(line: str, comp: str, in_loop: bool):
+    if _DONE_RE.search(line):
+        return None
+    for op, rx in _OP_RES.items():
+        if not rx.search(line):
+            continue
+        seg = line.split("=", 1)
+        seg = seg[1] if len(seg) > 1 else line
+        opidx = seg.find(op)
+        out_bytes = sum(_shape_bytes(m.group(1), m.group(2))
+                        for m in _SHAPE_RE.finditer(seg[:opidx]))
+        paren = seg.find("(", opidx)
+        close = seg.find(")", paren)
+        operand_seg = seg[paren + 1:close] if paren != -1 and close != -1 else ""
+        dtypes = tuple(m.group(1) for m in _SHAPE_RE.finditer(operand_seg))
+        sf = _META_SRC_RE.search(line)
+        sl = _META_LINE_RE.search(line)
+        return CollectiveRecord(
+            op=op, bytes=out_bytes, group_signature=_group_size(line),
+            operand_dtypes=dtypes, in_loop=in_loop, computation=comp,
+            source_file=sf.group(1) if sf else "",
+            source_line=int(sl.group(1)) if sl else 0)
+    return None
+
+
+def collective_records(hlo_text: str) -> list:
+    """Every collective in the module, visited through while bodies
+    (``in_loop=True``), calls, and ALL conditional branches (a widening
+    hiding in one branch still counts).  Each computation is visited at
+    most once per loop-context, so records are per-occurrence-in-source,
+    not per-trip."""
+    comps, entry = _split_computations(hlo_text)
+    records: list = []
+    visited: set = set()
+
+    def visit(name: str, in_loop: bool):
+        if (name, in_loop) in visited or name not in comps:
+            return
+        visited.add((name, in_loop))
+        for line in comps[name]:
+            rec = _line_record(line, name, in_loop)
+            if rec:
+                records.append(rec)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                visit(cond, True)
+                visit(body, True)
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                visit(cm.group(1), in_loop)
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for br in re.findall(r"%([\w\.\-~]+)", bm.group(1)):
+                    visit(br, in_loop)
+
+    if entry is None:
+        for ln in hlo_text.splitlines():
+            rec = _line_record(ln.strip(), "", False)
+            if rec:
+                records.append(rec)
+    else:
+        visit(entry, False)
+    return records

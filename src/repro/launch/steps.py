@@ -209,6 +209,15 @@ class BuiltStep:
     meta: dict
 
 
+def round_donation(built: "BuiltStep") -> tuple:
+    """``donate_argnums`` for jitting a BuiltStep.  Train rounds return the
+    new state as output 0, so arg 0 (the old state) is donatable — without
+    it the jitted round holds TWO copies of params+opt live (the PR 7
+    dryrun finding: memory_analysis showed zero alias bytes).  Serving
+    steps return fresh outputs and donate nothing."""
+    return (0,) if built.meta.get("kind") == "train" else ()
+
+
 def _token_sds(shape, dtype=jnp.int32):
     return jax.ShapeDtypeStruct(shape, dtype)
 

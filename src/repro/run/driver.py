@@ -80,7 +80,8 @@ def _dp_data_shape(data):
     """(batch_size, min per-agent dataset size) of the pipeline, or None
     when the data object does not expose them."""
     if isinstance(data, DeviceFederatedData):
-        return data.batch_size, int(np.asarray(data.sizes).min())
+        # one-time setup fetch (before the round loop starts), not per-round
+        return data.batch_size, int(np.asarray(data.sizes).min())  # analysis: allow(host-sync)
     rounds = data.rounds if isinstance(data, StreamingFederatedData) else data
     if isinstance(rounds, FederatedRounds):
         n_min = min(jax.tree_util.tree_leaves(d)[0].shape[0]
@@ -239,7 +240,9 @@ class RoundDriver:
         gap += time.perf_counter() - t_host
         history = []
         for base, c, metrics in chunks:   # one fetch per chunk, at the end
-            arr = jax.device_get(metrics)
+            # deliberate batched fetch AFTER all rounds dispatched — this is
+            # the fix for the eager per-round fetch, not a regression of it
+            arr = jax.device_get(metrics)  # analysis: allow(host-sync)
             for i in range(c):
                 history.append(tmap(lambda x: x[i], arr))
         return state, history, gap

@@ -8,6 +8,10 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# The planted-violation trees under fixtures/ contain deliberately broken
+# "tests" (lint fodder for repro.analysis) — never collect them.
+collect_ignore_glob = ["fixtures/*"]
+
 # The container ships no hypothesis wheel (and installing one is off-limits);
 # fall back to the deterministic stub.  Real hypothesis wins when present.
 try:

@@ -1,0 +1,12 @@
+"""Fixture codec registry."""
+
+
+class IntQuant:
+    def __init__(self, bits=8):
+        self.bits = bits
+
+
+CODECS = {
+    "int8": lambda: IntQuant(bits=8),
+    "int4": lambda: IntQuant(bits=4),
+}

@@ -1,0 +1,15 @@
+"""Fixture registry: GhostSync is registered but undocumented."""
+
+
+class FedAvgSync:
+    pass
+
+
+class GhostSync:
+    pass
+
+
+STRATEGIES = {
+    "fedgan": FedAvgSync,
+    "ghost": GhostSync,
+}

@@ -1,0 +1,25 @@
+"""Planted host-sync violations (fixture for tests/test_analysis.py).
+
+Line numbers matter — the test asserts exact anchors."""
+import jax
+import numpy as np
+
+
+def leaky_round(state, metrics):
+    loss = float(metrics["loss"])                      # line 9: float() sync
+    count = metrics["count"].item()                    # line 10: .item() sync
+    host = np.asarray(metrics["grad_norm"])            # line 11: np.asarray sync
+    fetched = jax.device_get(state)                    # line 12: device_get sync
+    return loss, count, host, fetched
+
+
+def waived_round(state, metrics):
+    # one-time fetch at the very end of the run, after all dispatches
+    fetched = jax.device_get(state)  # analysis: allow(host-sync)
+    return fetched
+
+
+def fine_round(state):
+    scale = float(1e-3)          # constant: no sync, must NOT be flagged
+    import jax.numpy as jnp
+    return jnp.asarray(state)    # jnp stays on device, must NOT be flagged

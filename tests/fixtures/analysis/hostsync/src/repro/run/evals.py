@@ -1,0 +1,7 @@
+"""Documented host-side module (in LintContext.host_side_modules) —
+syncs here must be skipped wholesale."""
+import jax
+
+
+def evaluate(state):
+    return jax.device_get(state)   # exempt: whole module is host-side

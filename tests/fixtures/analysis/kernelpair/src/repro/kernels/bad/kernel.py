@@ -1,0 +1,3 @@
+"""Fixture kernel with NO sibling ref.py — must be flagged at line 1."""
+def op(x):
+    return x * 3

@@ -1,0 +1,3 @@
+"""Fixture kernel WITH a ref oracle and a parity test — must not be flagged."""
+def op(x):
+    return x * 2

@@ -1,0 +1,2 @@
+def op(x):
+    return x * 2

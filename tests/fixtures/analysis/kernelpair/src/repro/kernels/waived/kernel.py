@@ -1,0 +1,3 @@
+# analysis: allow(kernel-ref-pair) — fixture: waived missing-ref kernel
+def op(x):
+    return x * 4

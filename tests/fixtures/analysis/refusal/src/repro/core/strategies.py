@@ -1,0 +1,15 @@
+"""Fixture: refusal guards for the refusal-matrix rule."""
+
+
+class FedAvgSync:
+    def validate(self, cfg):
+        if self.codec is not None and self.sync_dtype is not None:
+            raise ValueError("codec= and sync_dtype= are both wire "
+                             "compressions; pick one")
+
+
+class TrimmedMeanSync(FedAvgSync):
+    def validate(self, cfg):
+        if self.secure_agg is not None:
+            raise ValueError("robust aggregation needs the per-agent values "
+                             "a secure sum hides")

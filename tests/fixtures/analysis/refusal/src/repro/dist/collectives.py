@@ -1,0 +1,1 @@
+"""Fixture: no refusal guards live here."""

@@ -1,0 +1,46 @@
+"""Planted jaxpr-level violations (fixture for the trace auditor tests).
+
+Each violation has a waived twin carrying the ``analysis: allow`` marker;
+line numbers are asserted by tests/test_analysis.py."""
+import jax
+
+
+def callback_in_scan(state, xs):
+    def body(c, x):
+        jax.debug.print("c={}", c)          # line 10: host callback in scan
+        return c + x, c
+    return jax.lax.scan(body, state, xs)[0]
+
+
+def callback_in_scan_waived(state, xs):
+    def body(c, x):
+        # deliberate per-step debug hook (fixture)
+        jax.debug.print("c={}", c)  # analysis: allow(host-callback-in-scan)
+        return c + x, c
+    return jax.lax.scan(body, state, xs)[0]
+
+
+def raw_seed_in_loop(state, xs):
+    def body(c, x):
+        k = jax.random.key(0)               # line 25: raw seed in loop body
+        return c + x + jax.random.uniform(k, ()), c
+    return jax.lax.scan(body, state, xs)[0]
+
+
+def raw_seed_in_loop_waived(state, xs):
+    def body(c, x):
+        k = jax.random.key(0)  # analysis: allow(raw-fold-in)
+        return c + x + jax.random.uniform(k, ()), c
+    return jax.lax.scan(body, state, xs)[0]
+
+
+def pad_reuse(key):
+    a = jax.random.uniform(jax.random.fold_in(key, 7), ())
+    b = jax.random.uniform(jax.random.fold_in(key, 7), ())  # line 38: reuse
+    return a + b
+
+
+def pad_reuse_waived(key):
+    a = jax.random.uniform(jax.random.fold_in(key, 7), ())
+    b = jax.random.uniform(jax.random.fold_in(key, 7), ())  # analysis: allow(pad-reuse)
+    return a + b

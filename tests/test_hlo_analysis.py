@@ -78,3 +78,57 @@ ENTRY %main (a: f32[4,8], b: f32[8,4]) -> f32[4,4] {
 """
     pc = program_costs(hlo)
     assert pc["flops"] == 2 * 4 * 4 * 8
+
+
+def test_sub_byte_types_half_byte_per_elem():
+    """u4/s4 buffers are ceil(n/2) bytes — the old table fell through to the
+    4-byte unknown-dtype default and overstated int4 wire traffic 8x."""
+    hlo = """
+ENTRY %main (a: u4[1000]) -> u4[1000] {
+  ROOT %ag = u4[1000]{0} all-gather(%a), replica_groups=[2,4]<=[8]T(1,0), dimensions={0}
+}
+"""
+    st = collective_bytes(hlo)
+    assert st.total_bytes == 500, st.total_bytes
+    odd = collective_bytes("""
+ENTRY %main (a: s4[7]) -> s4[7] {
+  ROOT %ag = s4[7]{0} all-gather(%a), replica_groups=[2,4]<=[8]T(1,0), dimensions={0}
+}
+""")
+    assert odd.total_bytes == 4, odd.total_bytes  # ceil(7/2), integer math
+
+
+def test_collective_records_loop_context_and_metadata():
+    from repro.launch.hlo_analysis import collective_records
+    hlo = """
+%body (t: (f32[8])) -> (f32[8]) {
+  %t = (f32[8]{0}) parameter(0)
+  %g = f32[8]{0} get-tuple-element(%t), index=0
+  %ar = f32[8]{0} all-reduce(f32[8]{0} %g), replica_groups=[2,4]<=[8]T(1,0), to_apply=%add
+  ROOT %out = (f32[8]{0}) tuple(%ar)
+}
+
+%cond (t: (f32[8])) -> pred[] {
+  ROOT %c = pred[] constant(false)
+}
+
+ENTRY %main (a: bf16[16]) -> bf16[16] {
+  %a = bf16[16]{0} parameter(0)
+  %once = bf16[16]{0} all-reduce(bf16[16]{0} %a), replica_groups=[2,4]<=[8]T(1,0), to_apply=%add, metadata={op_name="jit(round)/sync" source_file="/root/repo/src/repro/dist/collectives.py" source_line=42}
+  %t = (f32[8]{0}) tuple(%f)
+  %w = (f32[8]{0}) while(%t), condition=%cond, body=%body
+  ROOT %r = bf16[16]{0} copy(%once)
+}
+"""
+    recs = collective_records(hlo)
+    by_comp = {r.computation: r for r in recs}
+    once = by_comp["main"]
+    assert not once.in_loop
+    assert once.operand_dtypes == ("bf16",)
+    assert once.bytes == 16 * 2
+    assert once.source_file.endswith("dist/collectives.py")
+    assert once.source_line == 42
+    looped = by_comp["body"]
+    assert looped.in_loop
+    assert looped.operand_dtypes == ("f32",)
+    assert looped.group_signature == "4T"

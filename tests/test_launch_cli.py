@@ -176,3 +176,31 @@ def test_runspec_builder_round_trip():
     assert fed.cfg.resolve_strategy() == PartialSharing()
     _, state, hist = spec.run()
     assert len(hist) == 2 and "d_loss" in hist[0]
+
+
+def test_dryrun_exposes_analyze_flag():
+    """--analyze must reach run_pair (the per-cell trace audit hook).
+
+    Runs in a subprocess: importing repro.launch.dryrun in-process would
+    append the 512-device XLA flag to this process's environment, which
+    every later subprocess test would inherit."""
+    import os
+    import subprocess
+    import sys
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    code = (
+        "import inspect\n"
+        "from repro.launch.dryrun import main, run_pair\n"
+        "assert 'analyze' in inspect.signature(run_pair).parameters\n"
+        "import sys; sys.argv = ['dryrun', '--help']\n"
+        "try:\n"
+        "    main()\n"
+        "except SystemExit as e:\n"
+        "    assert e.code in (0, None)\n"
+    )
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH=src),
+                         timeout=120)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "--analyze" in res.stdout
