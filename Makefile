@@ -2,8 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint analyze bench bench-dryrun bench-serve \
-        bench-rounds bench-comm bench-privacy sweep sweep-comm sweep-privacy \
-        docs-check quickstart serve-example strategies-parity
+        bench-rounds bench-comm bench-privacy bench-agents sweep sweep-comm \
+        sweep-privacy docs-check quickstart serve-example strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -64,6 +64,12 @@ bench-comm:
 # masked-sync overhead + wire accounting.  BENCH_privacy.json artifact.
 bench-privacy:
 	$(PY) benchmarks/run.py --only privacy --fast --json
+
+# Virtual-client fleet scaling: dense-vs-identity overhead + rounds/s
+# flatness 16 -> 1024 registered clients at a 16-slot cohort, with
+# machine-readable BENCH_agents.json artifact (both numbers CI-gated).
+bench-agents:
+	$(PY) benchmarks/run.py --only agents --fast --json
 
 # The paper's robustness-to-reduced-communication curve in one command
 # (FID stand-in vs K, FedGAN vs the per-step distributed baseline).

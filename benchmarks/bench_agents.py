@@ -1,0 +1,149 @@
+"""Agent-axis scaling: the virtual-client scheduler vs fleet size.
+
+Two claims, both CI-gated from BENCH_agents.json:
+
+  * **flat scaling** — rounds/s at a fixed cohort (``A_active = 16``) must
+    stay flat (±15%) as the registered fleet grows 16 -> 1024: the round
+    executable is compiled for the ``(P, A_active)`` slot grid only, and
+    paging cost tracks the *cohort* (diff-based swaps), never ``A_total``.
+    The 1024-client case doubles as the 2-core-host OOM smoke: device
+    state is bounded by the 16 slots, the other 1008 clients are host rows
+    (copy-on-write over the shared init template).
+  * **thin when idle** — with ``A_total == A_active`` and the identity
+    schedule the scheduler swaps nothing, so its rounds/s must stay
+    within 15% of the dense ``RoundDriver`` stream path.
+
+Run directly (``python benchmarks/bench_agents.py --json``) or as the
+``agents`` suite of ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# support `python benchmarks/bench_agents.py` directly (run.py does the
+# same dance for the suite path)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+from benchmarks import common
+
+
+def _virtual_driver(spec):
+    from repro.core.participation import ParticipationSchedule
+    from repro.run.virtual import VirtualClientDriver
+    fed, fleet = spec.build_fleet()
+    return VirtualClientDriver(
+        fed, fleet, spec.n_rounds, log_every=0,
+        schedule=ParticipationSchedule(seed=spec.participation_seed))
+
+
+def _median(runs, key):
+    return sorted(runs, key=lambda r: r.timings[key])[len(runs) // 2]
+
+
+def _interleaved(drivers, seeds, n=3):
+    """Warm each driver (pays the one compile), then round-robin ``n``
+    timed runs across all of them.  The CI host shares 2 cores and its
+    effective clock drifts ±20% over a suite, so configs whose ratio is
+    gated must sample the same time windows — a sequential sweep turns
+    that drift into a fake scaling trend."""
+    for d, s in zip(drivers, seeds):
+        d.run(jax.random.key(s))
+    runs = [[] for _ in drivers]
+    for _ in range(n):
+        for i, (d, s) in enumerate(zip(drivers, seeds)):
+            runs[i].append(d.run(jax.random.key(s)))
+    return runs
+
+
+def bench_fleet_scaling(*, fast: bool = False):
+    """rounds/s vs A_total at A_active = 16 on mixed_gaussian."""
+    from repro.launch.train import experiment_spec
+    a_active = 16
+    n = 6 if fast else 20
+    samples = 64 if fast else 256
+    a_totals = (16, 64, 256, 1024)
+    drivers, seeds = [], []
+    for a_total in a_totals:
+        spec, _ = experiment_spec(
+            "mixed_gaussian", K=5, steps=n * 5, log_every=0,
+            a_total=a_total, a_active=a_active, samples_per_agent=samples)
+        drivers.append(_virtual_driver(spec))
+        seeds.append(spec.seed + 1)
+    all_runs = _interleaved(drivers, seeds)
+    rps = {}
+    for a_total, driver, runs in zip(a_totals, drivers, all_runs):
+        t = _median(runs, "rounds_per_s").timings
+        rps[a_total] = t["rounds_per_s"]
+        assert driver.n_traces == 1, driver.n_traces  # compiled once, warm
+        common.emit(
+            f"agents_fleet_{a_total}", 1e6 / t["rounds_per_s"],
+            f"{t['rounds_per_s']:.1f} rounds/s, {t['store_rows']} host rows, "
+            f"{t['swapped_rows']} swapped",
+            rounds_per_s=round(t["rounds_per_s"], 2),
+            a_total=a_total, a_active=a_active,
+            store_rows=t["store_rows"], swapped_rows=t["swapped_rows"],
+            n_rounds=n, K=5, samples_per_agent=samples)
+    flatness = rps[1024] / rps[16]
+    common.emit("agents_scaling_flatness", 0.0,
+                f"rounds/s(A_total=1024) / rounds/s(16) = {flatness:.3f}",
+                flatness=round(flatness, 3))
+    return flatness
+
+
+def bench_virtual_overhead(*, fast: bool = False):
+    """Identity-cohort virtual path vs the dense stream RoundDriver."""
+    from repro.launch.train import experiment_spec
+    from repro.run.driver import RoundDriver
+    n = 8 if fast else 25
+    samples = 64 if fast else 256
+    kw = dict(K=5, steps=n * 5, log_every=0, samples_per_agent=samples)
+    dense_spec, _ = experiment_spec("mixed_gaussian", agents=16, **kw)
+    fed, _ = dense_spec.build()
+    dense = RoundDriver(fed, dense_spec.build_data(), n, log_every=0)
+    virt_spec, _ = experiment_spec("mixed_gaussian", a_total=16,
+                                   a_active=16, **kw)
+    virt = _virtual_driver(virt_spec)
+    dense_runs, virt_runs = _interleaved(
+        [dense, virt], [dense_spec.seed + 1, virt_spec.seed + 1])
+    dense_res = _median(dense_runs, "steps_per_s")
+    virt_res = _median(virt_runs, "rounds_per_s")
+    assert virt_res.timings["swapped_rows"] == 0  # identity schedule pages 0
+
+    # the dense driver reports steps/s; rounds/s = steps/s / K
+    d_rps = dense_res.timings["steps_per_s"] / 5
+    v_rps = virt_res.timings["rounds_per_s"]
+    overhead = d_rps / v_rps - 1.0
+    common.emit(
+        "agents_virtual_overhead", 1e6 / v_rps,
+        f"dense {d_rps:.1f} vs virtual {v_rps:.1f} rounds/s "
+        f"({overhead * 100:+.1f}% overhead)",
+        dense_rounds_per_s=round(d_rps, 2),
+        virtual_rounds_per_s=round(v_rps, 2),
+        overhead_frac=round(overhead, 4), n_rounds=n)
+    return overhead
+
+
+def main(*, fast: bool = False):
+    bench_virtual_overhead(fast=fast)
+    bench_fleet_scaling(fast=fast)
+
+
+if __name__ == "__main__":
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_agents.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(fast=args.fast)
+    if args.json:
+        with open("BENCH_agents.json", "w") as f:
+            json.dump({"suite": "agents", "fast": args.fast,
+                       "records": common.drain_records()}, f, indent=1)
+        print("# wrote BENCH_agents.json", file=sys.stderr)

@@ -14,6 +14,7 @@
 #   kernels (Pallas vs oracle)           -> bench_kernels
 #   serving (tok/s + tick latency vs occupancy) -> bench_serve
 #   privacy (DP/secure-sum/robust cost surface) -> bench_privacy
+#   agents (virtual-client fleet scaling)       -> bench_agents
 #
 # ``--json`` additionally writes one machine-readable BENCH_<suite>.json per
 # executed suite (into --json-dir), so the bench trajectory is comparable
@@ -40,10 +41,10 @@ def main() -> None:
                     help="directory for the --json artifacts")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_comm, bench_images, bench_kernels,
-                            bench_lemmas, bench_privacy, bench_roofline,
-                            bench_rounds, bench_serve, bench_timeseries,
-                            bench_toy, common)
+    from benchmarks import (bench_agents, bench_comm, bench_images,
+                            bench_kernels, bench_lemmas, bench_privacy,
+                            bench_roofline, bench_rounds, bench_serve,
+                            bench_timeseries, bench_toy, common)
 
     fast = args.fast
     suites = {
@@ -61,6 +62,7 @@ def main() -> None:
         "serve": lambda: bench_serve.main(fast=fast),
         "rounds": lambda: bench_rounds.main(fast=fast),
         "privacy": lambda: bench_privacy.main(fast=fast),
+        "agents": lambda: bench_agents.main(fast=fast),
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

@@ -72,7 +72,9 @@ def save_checkpoint(directory: str, state: Any, *, step: int,
     arrays = {}
     dtypes = []
     for i, (p, leaf) in enumerate(_flatten_with_paths(state)):
-        arr = np.ascontiguousarray(np.asarray(leaf))
+        arr = np.asarray(leaf)
+        if arr.ndim:  # ascontiguousarray would promote 0-d leaves to (1,)
+            arr = np.ascontiguousarray(arr)
         dtypes.append(arr.dtype.name)
         if not _is_native(arr.dtype):
             # bfloat16 etc.: store the raw bytes, dtype recorded in manifest
@@ -124,7 +126,12 @@ def read_latest_step(directory: str) -> int | None:
         return None
 
 
-def restore_checkpoint(directory: str, *, step: int | None = None) -> tuple[Any, dict]:
+def restore_checkpoint(directory: str, *, step: int | None = None,
+                       to_device: bool = True) -> tuple[Any, dict]:
+    """Rebuild (state, manifest).  ``to_device=False`` keeps every leaf a
+    host numpy array — the virtual-client runtime restores fleet state
+    this way so a 1024-client checkpoint never round-trips through device
+    memory that only holds the ``A_active`` slots."""
     if step is None:
         with open(os.path.join(directory, "LATEST")) as f:
             name = f.read().strip()
@@ -142,7 +149,7 @@ def restore_checkpoint(directory: str, *, step: int | None = None) -> tuple[Any,
         if name != arr.dtype.name:  # stored as raw bytes
             dt = np.dtype(name)
             arr = arr.reshape(-1).view(dt).reshape(arr.shape[:-1])
-        leaves_by_path[p] = jnp.asarray(arr)
+        leaves_by_path[p] = jnp.asarray(arr) if to_device else np.asarray(arr)
     state = _rebuild(manifest["structure"], leaves_by_path)
     return state, manifest
 

@@ -140,12 +140,17 @@ class FedGAN:
         w = uniform_weights(self.cfg) if self.weights is None else jnp.asarray(self.weights)
         return w / jnp.sum(w)
 
-    def init_state(self, rng) -> dict:
+    def init_state(self, rng, *, agent_grid=None) -> dict:
         """All agents start from the same (w_hat, theta_hat) — Algorithm 1.
         Strategies may carry extra entries across rounds (e.g. the
         error-feedback residuals of a compressed sync) — those are merged
-        here so every state-construction path gets them."""
-        P, A = self.cfg.agent_grid
+        here so every state-construction path gets them.
+
+        ``agent_grid`` overrides the config grid for the broadcast — the
+        virtual-client runtime uses a ``(1, 1)`` slot-view init to build
+        the one per-client template row every not-yet-materialized client
+        shares (Algorithm 1 starts the whole fleet from the same point)."""
+        P, A = agent_grid or self.cfg.agent_grid
         params = self.task.init(rng)
         opt_g = self.opt_g.init(params["gen"])
         opt_d = self.opt_d.init(params["disc"])

@@ -1,0 +1,98 @@
+"""Per-round participation sampling — the single source of cohort draws.
+
+Cross-device FL fleets are far larger than any per-round cohort: of
+``A_total`` registered clients only ``m`` participate in round ``r``.  Two
+consumers need the *same* draw:
+
+  * the host-side scheduler (``repro.run.virtual``) needs the cohort as
+    concrete client ids, to page their state into the device slots;
+  * the traced sync path (``SubsampledFedAvg``) needs it as a (P, A) bool
+    mask folded into the §3.1 averaging weights.
+
+Before this module each path rolled its own RNG, so seeds could silently
+diverge.  :class:`ParticipationSchedule` centralises the draw: both views
+derive from one ``_scores`` stream keyed only by ``(seed, round_idx)`` —
+stateless, so a resumed run replays the identical cohort sequence with no
+RNG state in the checkpoint beyond the seed and the round counter.
+
+Sampling is uniform without replacement by default; ``weights`` switches
+to probability-proportional-to-weight sampling via Efraimidis–Spirakis
+reservoir keys (top-m of ``log(u_i)/w_i``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSchedule:
+    """Seeded, resumable per-round cohort sampler.
+
+    ``seed`` keys the whole schedule; ``weights`` (len ``A_total``, all
+    positive) biases the draw toward larger-weight clients (Efraimidis–
+    Spirakis A-Res — inclusion frequency grows with weight, exactly
+    proportional in the m=1 case).  Hashable, so it can ride static jit
+    arguments.
+    """
+
+    seed: int = 0
+    weights: tuple | None = None
+
+    def validate(self, n_total: int | None = None) -> None:
+        if self.weights is not None:
+            # static config check on a python tuple — nothing device-side
+            w = np.asarray(self.weights, np.float64)  # analysis: allow(host-sync)
+            if w.ndim != 1 or w.size == 0:
+                raise ValueError(f"weights must be a flat non-empty tuple, "
+                                 f"got shape {w.shape}")
+            if not np.isfinite(w).all() or (w <= 0).any():
+                raise ValueError("participation weights must be finite and "
+                                 "strictly positive")
+            if n_total is not None and w.size != n_total:
+                raise ValueError(f"got {w.size} participation weights for "
+                                 f"{n_total} clients")
+
+    # ------------------------------------------------------------------
+    def _scores(self, round_idx, n: int):
+        """Per-client priority scores for a round; the ``m`` largest win.
+
+        Shared by the host :meth:`cohort` and the traced :meth:`mask` so
+        the two views can never diverge.  ``round_idx`` may be a tracer.
+        """
+        key = jax.random.fold_in(jax.random.key(self.seed), round_idx)
+        u = jax.random.uniform(key, (n,))
+        if self.weights is None:
+            return u
+        w = jnp.asarray(self.weights, jnp.float32)
+        # Efraimidis–Spirakis keys: top-m of u^(1/w), in log space
+        return jnp.log(u) / w
+
+    def cohort(self, round_idx: int, n_total: int, m: int) -> np.ndarray:
+        """The ``m`` participating client ids for ``round_idx``, sorted
+        ascending.  ``m == n_total`` is the identity cohort (every client,
+        in id order) — the full-participation fast path draws nothing."""
+        self.validate(n_total)
+        if not 1 <= m <= n_total:
+            raise ValueError(f"cohort size m={m} must be in [1, {n_total}]")
+        if m == n_total:
+            return np.arange(n_total)
+        # one-time host fetch per round *plan*, before any dispatch — the
+        # scheduler needs concrete ids to page state
+        scores = np.asarray(self._scores(int(round_idx), n_total))  # analysis: allow(host-sync)
+        top = np.argpartition(scores, n_total - m)[n_total - m:]
+        return np.sort(top)
+
+    def mask(self, round_idx, grid: tuple[int, int], m: int):
+        """(P, A) bool participation mask — the traced view of
+        :meth:`cohort` for the dense all-agents-on-device layout (client
+        id = flattened (p, a) index).  Same score stream, so
+        ``mask(...).reshape(-1)[i] == (i in cohort(...))``."""
+        P, A = grid
+        n = P * A
+        scores = self._scores(round_idx, n)
+        kth = jnp.sort(scores)[-m]
+        return (scores >= kth).reshape(P, A)

@@ -50,6 +50,7 @@ agent-stacked state dict.  All hooks must stay jit-traceable.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -154,6 +155,15 @@ class SyncStrategy:
         ``FedGAN.init_state``); base strategies carry nothing."""
         return {}
 
+    def state_axes(self) -> dict:
+        """Per-entry paging axis for everything :meth:`init_round_state`
+        carries: ``"client"`` (agent-stacked — one row per client, paged
+        host<->device with the cohort by ``repro.run.virtual.ClientStore``)
+        or ``"shared"`` (one fleet-wide copy that stays on device).  A
+        strategy that carries state without declaring it here cannot run
+        under the virtual-client scheduler — the store refuses to guess."""
+        return {}
+
     def grad_hook(self, fed, grad_disc, grad_gen, state):
         return grad_disc, grad_gen
 
@@ -247,6 +257,13 @@ class FedAvgSync(SyncStrategy):
                                 state["params"][k]) for k in self.subtrees},
         }
 
+    def state_axes(self) -> dict:
+        if self.codec is None or not self.error_feedback:
+            return {}
+        # uplink residuals are per-agent (they follow the client between
+        # rounds); the intermediary's downlink residual is fleet-shared
+        return {"ef": "client", "ef_down": "shared"}
+
     def participation_mask(self, fed, state):
         """(P, A) bool mask of agents taking part in this round's sync, or
         None for all.  Evaluated at round end (state['step'] = (r+1)*K)."""
@@ -296,22 +313,53 @@ class SubsampledFedAvg(FedAvgSync):
     """Partial participation: each round, ``ceil(fraction * B)`` agents are
     drawn (deterministically from the round index) and the participation
     mask is folded into the weights — participants average among
-    themselves and receive the result, the rest keep their local state."""
+    themselves and receive the result, the rest keep their local state.
+
+    The draw comes from a ``repro.core.participation.ParticipationSchedule``
+    (``schedule=``) — the same sampler the virtual-client runtime uses to
+    pick which clients are paged onto the device, so the two paths share
+    one seed stream by construction.  The old ``mask_seed=`` knob is a
+    deprecated alias for ``schedule=ParticipationSchedule(seed=...)``."""
 
     fraction: float = 0.5
-    mask_seed: int = 0
+    mask_seed: Any = None       # deprecated — use schedule=
+    schedule: Any = None        # ParticipationSchedule; None -> seed 0
     name = "subsampled"
+
+    def __post_init__(self):
+        if self.mask_seed is not None:
+            warnings.warn(
+                "SubsampledFedAvg(mask_seed=...) is deprecated: the "
+                "participation draw is owned by repro.core.participation."
+                "ParticipationSchedule so the traced mask and the "
+                "virtual-client scheduler cannot diverge — pass "
+                "schedule=ParticipationSchedule(seed=...) instead",
+                DeprecationWarning, stacklevel=3)
 
     def validate(self, cfg):
         super().validate(cfg)
         if not 0.0 < self.fraction <= 1.0:
             raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+        if self.mask_seed is not None and self.schedule is not None:
+            raise ValueError(
+                "mask_seed= is the deprecated spelling of schedule="
+                "ParticipationSchedule(seed=...); passing both would leave "
+                "two competing seed streams — drop mask_seed")
+        self.resolve_schedule().validate(cfg.num_agents)
         if self.secure_agg is not None:
             raise ValueError(
                 "secure_agg= needs every pair's both mask halves on the "
                 "wire; per-round dropouts (subsampled participation) break "
                 "the cancellation — real SecAgg recovers dropped seeds via "
                 "a protocol this simulation does not model")
+
+    def resolve_schedule(self):
+        """The single sampling source for this strategy's cohort draws."""
+        from repro.core.participation import ParticipationSchedule
+        if self.schedule is not None:
+            return self.schedule
+        return ParticipationSchedule(
+            seed=0 if self.mask_seed is None else int(self.mask_seed))
 
     def num_participants(self, cfg) -> int:
         return max(1, int(round(self.fraction * cfg.num_agents)))
@@ -322,10 +370,7 @@ class SubsampledFedAvg(FedAvgSync):
         if m == P * A:
             return None
         r_idx = state["step"] // fed.cfg.sync_interval - 1
-        key = jax.random.fold_in(jax.random.key(self.mask_seed), r_idx)
-        scores = jax.random.uniform(key, (P, A))
-        kth = jnp.sort(scores.reshape(-1))[-m]
-        return scores >= kth
+        return self.resolve_schedule().mask(r_idx, (P, A), m)
 
     def bytes_per_round(self, cfg, params, opt=None) -> int:
         # fleet-average per agent: only m of B agents hit the wire per round

@@ -3,6 +3,7 @@ from repro.data.federated import (
     DeviceFederatedData,
     FederatedData,
     FederatedRounds,
+    FleetRounds,
     StreamingFederatedData,
     dirichlet_partition,
     label_shard_partition,
@@ -11,7 +12,7 @@ from repro.data.federated import (
 )
 
 __all__ = [
-    "DeviceFederatedData", "FederatedData", "FederatedRounds",
+    "DeviceFederatedData", "FederatedData", "FederatedRounds", "FleetRounds",
     "StreamingFederatedData", "dirichlet_partition", "label_shard_partition",
     "partition_sizes", "round_key_schedule", "synthetic",
 ]

@@ -91,25 +91,90 @@ class FederatedRounds:
 
     def round_batches(self, rng):
         """Returns (batches, seeds): pytree with leading (K, P, A, batch)."""
-        P, A = self.agent_grid
-        K = self.sync_interval
-        r_idx, r_extra, r_seed = jax.random.split(rng, 3)
-        per_agent = []
-        for i, data in enumerate(self.agent_data):
-            n = jax.tree_util.tree_leaves(data)[0].shape[0]
-            idx = jax.random.randint(jax.random.fold_in(r_idx, i),
-                                     (K, self.batch_size), 0, n)
-            mb = tmap(lambda x: x[idx], data)            # (K, batch, ...)
-            if self.sample_extra is not None:
-                extra = self.sample_extra(jax.random.fold_in(r_extra, i),
-                                          (K, self.batch_size))
-                mb = {**mb, **extra}
-            per_agent.append(mb)
-        stacked = tmap(lambda *xs: jnp.stack(xs, axis=1), *per_agent)
-        batches = tmap(
-            lambda x: x.reshape((K, P, A) + x.shape[2:]), stacked)
-        seeds = jax.random.randint(r_seed, (K, P, A), 0, 2 ** 31 - 1).astype(jnp.uint32)
-        return batches, seeds
+        return _assemble_round(self.agent_data, range(len(self.agent_data)),
+                               self.agent_grid, self.batch_size,
+                               self.sync_interval, self.sample_extra, rng)
+
+
+def _assemble_round(agent_data, salts, slot_grid, batch_size, sync_interval,
+                    sample_extra, rng):
+    """The one host-side round assembler.  Per agent, index/extra draws are
+    folded with that agent's ``salt``; seeds come from the slot grid.  Both
+    :class:`FederatedRounds` (salt = position, the legacy bit-parity
+    contract) and :class:`FleetRounds` (salt = global client id, so a
+    client's data stream is independent of which slot it lands in) call
+    this, which is what makes identity-cohort parity hold by construction
+    rather than by test alone."""
+    P, A = slot_grid
+    K = sync_interval
+    r_idx, r_extra, r_seed = jax.random.split(rng, 3)
+    per_agent = []
+    for data, salt in zip(agent_data, salts):
+        n = jax.tree_util.tree_leaves(data)[0].shape[0]
+        idx = jax.random.randint(jax.random.fold_in(r_idx, salt),
+                                 (K, batch_size), 0, n)
+        mb = tmap(lambda x: x[idx], data)            # (K, batch, ...)
+        if sample_extra is not None:
+            extra = sample_extra(jax.random.fold_in(r_extra, salt),
+                                 (K, batch_size))
+            mb = {**mb, **extra}
+        per_agent.append(mb)
+    stacked = tmap(lambda *xs: jnp.stack(xs, axis=1), *per_agent)
+    batches = tmap(
+        lambda x: x.reshape((K, P, A) + x.shape[2:]), stacked)
+    seeds = jax.random.randint(r_seed, (K, P, A), 0, 2 ** 31 - 1).astype(jnp.uint32)
+    return batches, seeds
+
+
+@dataclasses.dataclass
+class FleetRounds:
+    """Round assembler for a fleet larger than the device: ``agent_data``
+    holds every registered client's local dataset (len ``A_total``), but
+    each round only the sampled cohort — ``P * A_active`` clients — is
+    assembled into the dense ``(K, P, A_active, batch, ...)`` slot tensor.
+
+    Draws are salted with the *global* client id, not the slot position,
+    so (a) a client sees the same data stream no matter which slot it is
+    paged into, and (b) with the identity cohort this is bit-identical to
+    :class:`FederatedRounds` over the same ``agent_data``.
+    """
+
+    agent_data: Sequence[Any]          # len A_total
+    slot_grid: tuple[int, int]         # (P, A_active)
+    batch_size: int
+    sync_interval: int
+    sample_extra: Callable | None = None
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.agent_data)
+
+    @property
+    def cohort_size(self) -> int:
+        return self.slot_grid[0] * self.slot_grid[1]
+
+    def __post_init__(self):
+        if self.num_clients < self.cohort_size:
+            raise ValueError(
+                f"fleet of {self.num_clients} clients cannot fill "
+                f"{self.cohort_size} device slots {self.slot_grid}")
+
+    def client_sizes(self) -> np.ndarray:
+        """Per-client dataset sizes |R_i| (len A_total) — the §3.1 weight
+        numerators for dataset-size weighting."""
+        return np.asarray([jax.tree_util.tree_leaves(d)[0].shape[0]
+                           for d in self.agent_data], np.int64)
+
+    def round_batches(self, rng, slot_clients):
+        """Assemble one round for ``slot_clients`` — the global client id
+        occupying each slot, in slot order (len ``P * A_active``)."""
+        ids = [int(c) for c in slot_clients]
+        if len(ids) != self.cohort_size:
+            raise ValueError(f"got {len(ids)} cohort ids for "
+                             f"{self.cohort_size} slots")
+        return _assemble_round([self.agent_data[c] for c in ids], ids,
+                               self.slot_grid, self.batch_size,
+                               self.sync_interval, self.sample_extra, rng)
 
 
 # ---------------------------------------------------------------------------

@@ -114,10 +114,21 @@ class RunSpec:
     rounds_per_chunk: int = 1       # device mode: rounds per scan dispatch
     eval_every: int = 0             # rounds between eval-hook points
     eval_hooks: Any = ()
+    # -- virtual-client scheduler (repro.run.virtual) -----------------------
+    a_total: int = 0                # fleet size; 0 = dense (all on device)
+    participation_seed: int = 0     # ParticipationSchedule seed
+    straggler_policy: str = "block"  # "block" | "defer"
 
     @property
     def n_rounds(self) -> int:
         return max(self.steps // self.K, 1)
+
+    @property
+    def virtual(self) -> bool:
+        """True when this spec runs the virtual-client scheduler: the fleet
+        (``agent_data``, len ``a_total``) is larger than the device slot
+        grid ``agent_grid`` and cohorts are paged per round."""
+        return self.a_total > 0
 
     def build(self):
         fed = FedGAN(self.task,
@@ -145,10 +156,43 @@ class RunSpec:
         raise ValueError(f"unknown data_mode {self.data_mode!r} "
                          "(expected 'stream' or 'device')")
 
+    def build_fleet(self):
+        """Virtual mode: the (FedGAN, FleetRounds) pair — the model on the
+        ``agent_grid`` slot grid, the data over all ``a_total`` clients."""
+        from repro.data.federated import FleetRounds
+        if len(self.agent_data) != self.a_total:
+            raise ValueError(f"a_total={self.a_total} but agent_data holds "
+                             f"{len(self.agent_data)} client datasets")
+        fed = FedGAN(self.task,
+                     FedGANConfig(agent_grid=self.agent_grid,
+                                  sync_interval=self.K,
+                                  strategy=self.strategy, dp=self.dp),
+                     opt_g=self.opt_g, opt_d=self.opt_d,
+                     scales=self.scales or equal_timescale(constant(1e-3)),
+                     weights=self.weights)
+        fleet = FleetRounds(self.agent_data, self.agent_grid,
+                            self.batch_size, self.K,
+                            sample_extra=self.sample_extra)
+        return fed, fleet
+
     def run_result(self):
         """Execute through the ``repro.run`` runtime; returns the full
         :class:`repro.run.RunResult` (state, history, evals, timings)."""
         from repro.run.driver import RoundDriver
+        if self.virtual:
+            from repro.core.participation import ParticipationSchedule
+            from repro.run.virtual import (StragglerPolicy,
+                                           VirtualClientDriver)
+            fed, fleet = self.build_fleet()
+            driver = VirtualClientDriver(
+                fed, fleet, self.n_rounds,
+                schedule=ParticipationSchedule(seed=self.participation_seed),
+                straggler=StragglerPolicy(mode=self.straggler_policy),
+                log_every=self.log_every, verbose=bool(self.log_every),
+                eval_every=self.eval_every, eval_hooks=self.eval_hooks,
+                ckpt_dir=self.ckpt_dir,
+                ckpt_every=max(self.n_rounds // 4, 1) if self.ckpt_dir else 0)
+            return driver.run(jax.random.key(self.seed + 1))
         fed, _ = self.build()
         state = fed.init_state(jax.random.key(self.seed))
         driver = RoundDriver(
@@ -193,24 +237,50 @@ def experiment_spec(name: str, *, K: int | None = None,
                     batch_size: int | None = None,
                     agents: int | None = None, log_every: int | None = None,
                     eval_every: int = 0, data_mode: str = "stream",
-                    rounds_per_chunk: int = 1):
+                    rounds_per_chunk: int = 1, a_total: int = 0,
+                    a_active: int = 0, participation_seed: int = 0,
+                    straggler_policy: str = "block",
+                    samples_per_agent: int | None = None):
     """Build (RunSpec, EvalSuite) for one of the paper's experiments on the
     synthetic stand-in data.  ``batch_size``/``agents``/``log_every``
     override the experiment-config defaults (the CLI knobs); the EvalSuite
-    feeds the ``repro.run`` eval harness and the K-sweep runner."""
+    feeds the ``repro.run`` eval harness and the K-sweep runner.
+
+    ``a_total`` switches to the virtual-client scheduler: the experiment's
+    non-iid partition is dealt over ``a_total`` registered clients (mode
+    assignments wrap, per-client shards shrink to ``samples_per_agent``,
+    default 512, so a 1024-client fleet fits host memory) of which the
+    ``ParticipationSchedule(participation_seed)``-sampled cohort of
+    ``a_active`` runs per round on the device slots."""
     from repro.configs.paper_gans import ALL_EXPERIMENTS, optimizer_for, scales_for
     from repro.run.evals import EvalSuite, eval_hook
     exp = ALL_EXPERIMENTS[name]
     K = K or exp.default_K
     steps = steps or exp.iterations
-    B = agents or exp.num_agents
+    if a_total:
+        if agents:
+            raise ValueError("--agents conflicts with --a-total (the fleet "
+                             "size IS the client count); use --a-active for "
+                             "the per-round cohort size")
+        B = a_total
+        a_active = a_active or exp.num_agents
+        if not 1 <= a_active <= a_total:
+            raise ValueError(f"a_active={a_active} must be in [1, "
+                             f"a_total={a_total}]")
+    else:
+        B = agents or exp.num_agents
+    if samples_per_agent is None:
+        # thousand-client fleets live host-side; shrink per-client shards so
+        # the whole fleet's data fits (dense runs keep the paper-size shards)
+        samples_per_agent = 512 if a_total else 0
+    n_of = lambda default: samples_per_agent or default
     batch_size = batch_size or exp.batch_size
     rng = jax.random.key(seed)
 
     if name == "toy_2d":
         task, (G, _) = toy2d_task()
         agent_data = [{"x": synthetic.sample_2d_segment(
-            jax.random.fold_in(rng, i), 4096, i, B)} for i in range(B)]
+            jax.random.fold_in(rng, i), n_of(4096), i, B)} for i in range(B)]
         extra = lambda r, s: {"z": jax.random.uniform(r, s, minval=-1, maxval=1)}
         suite = EvalSuite(
             real=_pooled_real(agent_data, seed),
@@ -221,7 +291,7 @@ def experiment_spec(name: str, *, K: int | None = None,
         # 8 modes on the circle; with an --agents override beyond 4 the
         # mode assignment wraps (agents share modes, still non-iid pairs)
         agent_data = [{"x": synthetic.sample_mixed_gaussian(
-            jax.random.fold_in(rng, i), 8192,
+            jax.random.fold_in(rng, i), n_of(8192),
             mode_subset=[(2 * i) % 8, (2 * i + 1) % 8])}
             for i in range(B)]
         extra = lambda r, s: {"z": jax.random.normal(r, s + (2,))}
@@ -233,7 +303,7 @@ def experiment_spec(name: str, *, K: int | None = None,
     elif name == "swiss_roll":
         task, (G, _) = mlp_gan_task()
         agent_data = [{"x": synthetic.sample_swiss_roll(
-            jax.random.fold_in(rng, i), 8192,
+            jax.random.fold_in(rng, i), n_of(8192),
             t_range=(0.25 + 0.75 * i / B, 0.25 + 0.75 * (i + 1) / B))}
             for i in range(B)]
         extra = lambda r, s: {"z": jax.random.normal(r, s + (2,))}
@@ -249,10 +319,10 @@ def experiment_spec(name: str, *, K: int | None = None,
             # class slice wraps under an --agents override larger than the
             # class count (keeps randint bounds valid: lo < hi <= ncls)
             lo = (i * per) % ncls
-            lab = jax.random.randint(jax.random.fold_in(rng, 100 + i), (2048,),
-                                     lo, min(lo + per, ncls))
+            lab = jax.random.randint(jax.random.fold_in(rng, 100 + i),
+                                     (n_of(2048),), lo, min(lo + per, ncls))
             img = synthetic.sample_class_images(
-                jax.random.fold_in(rng, 200 + i), 2048, lab, hw=16,
+                jax.random.fold_in(rng, 200 + i), n_of(2048), lab, hw=16,
                 num_classes=ncls)
             return {"x": img, "y": lab}
         agent_data = [mk(i) for i in range(B)]
@@ -268,9 +338,9 @@ def experiment_spec(name: str, *, K: int | None = None,
     elif name == "timeseries_cgan":
         task, (G, _) = cgan1d_task()
         def mk(i):
-            cz = jnp.full((4096,), i % 5, jnp.int32)  # 5 climate zones
-            x = synthetic.sample_household_load(jax.random.fold_in(rng, i), 4096,
-                                                climate_zone=cz)
+            cz = jnp.full((n_of(4096),), i % 5, jnp.int32)  # 5 climate zones
+            x = synthetic.sample_household_load(jax.random.fold_in(rng, i),
+                                                n_of(4096), climate_zone=cz)
             return {"x": x, "y": jax.nn.one_hot(cz, 5)}
         agent_data = [mk(i) for i in range(B)]
         extra = lambda r, s: {"z": jax.random.normal(r, s + (24,))}
@@ -286,25 +356,36 @@ def experiment_spec(name: str, *, K: int | None = None,
         raise KeyError(name)
 
     opt_d, opt_g = optimizer_for(exp)
+    grid = (1, a_active) if a_total else (1, B)
     spec = RunSpec(
-        task=task, agent_data=agent_data, agent_grid=(1, B), K=K, steps=steps,
+        task=task, agent_data=agent_data, agent_grid=grid, K=K, steps=steps,
         batch_size=batch_size, scales=scales_for(exp), opt_d=opt_d,
         opt_g=opt_g, strategy=strategy, dp=dp, sample_extra=extra, seed=seed,
         log_every=max((steps // K) // 10, 1) if log_every is None else log_every,
         ckpt_dir=ckpt_dir, data_mode=data_mode,
         rounds_per_chunk=rounds_per_chunk, eval_every=eval_every,
-        eval_hooks=(eval_hook(suite, seed=seed),) if eval_every else ())
+        eval_hooks=(eval_hook(suite, seed=seed),) if eval_every else (),
+        a_total=a_total, participation_seed=participation_seed,
+        straggler_policy=straggler_policy)
     return spec, suite
 
 
 def run_experiment(name: str, *, K: int | None, steps: int | None, seed: int,
                    strategy=None, dp=None, ckpt_dir: str = "",
                    batch_size=None, agents=None, log_every=None,
-                   eval_every: int = 0, data_mode: str = "stream"):
+                   eval_every: int = 0, data_mode: str = "stream",
+                   a_total: int = 0, a_active: int = 0,
+                   participation_seed: int = 0,
+                   straggler_policy: str = "block",
+                   samples_per_agent: int | None = None):
     spec, _ = experiment_spec(
         name, K=K, steps=steps, seed=seed, strategy=strategy, dp=dp,
         ckpt_dir=ckpt_dir, batch_size=batch_size, agents=agents,
-        log_every=log_every, eval_every=eval_every, data_mode=data_mode)
+        log_every=log_every, eval_every=eval_every, data_mode=data_mode,
+        a_total=a_total, a_active=a_active,
+        participation_seed=participation_seed,
+        straggler_policy=straggler_policy,
+        samples_per_agent=samples_per_agent)
     return spec.run()
 
 
@@ -423,6 +504,23 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["stream", "device"],
                     help="round data pipeline: host-streaming (legacy-"
                          "parity) or device-resident in-round sampling")
+    ap.add_argument("--a-total", type=int, default=0,
+                    help="virtual-client fleet size A_total (0 = dense run; "
+                         "conflicts with --agents)")
+    ap.add_argument("--a-active", type=int, default=0,
+                    help="per-round cohort size A_active — the device slot "
+                         "count (0 = experiment's num_agents)")
+    ap.add_argument("--participation-seed", type=int, default=0,
+                    help="seed of the per-round cohort draw "
+                         "(repro.core.participation)")
+    ap.add_argument("--straggler-policy", default="block",
+                    choices=["block", "defer"],
+                    help="block: wait for every cohort member; defer: merge "
+                         "late deltas into a later round with staleness "
+                         "decay")
+    ap.add_argument("--samples-per-agent", type=int, default=0,
+                    help="per-client dataset size override (0 = experiment "
+                         "default, or 512 under --a-total)")
     return ap
 
 
@@ -517,8 +615,16 @@ def main():
         run_experiment(args.experiment, K=args.K or None, steps=args.steps or None,
                        seed=args.seed, strategy=strategy, dp=dp,
                        ckpt_dir=args.ckpt_dir,
-                       eval_every=args.eval_every, **overrides)
+                       eval_every=args.eval_every,
+                       a_total=args.a_total, a_active=args.a_active,
+                       participation_seed=args.participation_seed,
+                       straggler_policy=args.straggler_policy,
+                       samples_per_agent=args.samples_per_agent or None,
+                       **overrides)
     elif args.arch:
+        if args.a_total:
+            ap.error("--a-total needs --experiment (the backbone smoke "
+                     "runs are dense by construction)")
         if args.eval_every:
             ap.error("--eval-every needs --experiment (no eval suite exists "
                      "for backbone smoke runs)")

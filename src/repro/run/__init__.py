@@ -1,12 +1,17 @@
 # Pillar four: the streaming training runtime.  A donated, chunked round
 # driver over the FederatedData pipelines, an eval harness on the
-# intermediary's averaged params, and the paper-figure K-sweep runner.
+# intermediary's averaged params, the paper-figure K-sweep runner, and
+# the virtual-client scheduler (A_total clients on A_active device slots).
 from repro.run.driver import RoundDriver, RunResult, train
 from repro.run.evals import EvalSuite, eval_hook, evaluate, final_fd
+from repro.run.virtual import (ClientStore, StragglerPolicy,
+                               VirtualClientDriver, load_fleet_checkpoint)
 
 __all__ = [
-    "EvalSuite", "RoundDriver", "RunResult", "eval_hook", "evaluate",
-    "final_fd", "run_sweep", "summary_table", "train",
+    "ClientStore", "EvalSuite", "RoundDriver", "RunResult",
+    "StragglerPolicy", "VirtualClientDriver", "eval_hook", "evaluate",
+    "final_fd", "load_fleet_checkpoint", "run_sweep", "summary_table",
+    "train",
 ]
 
 

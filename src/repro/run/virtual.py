@@ -1,0 +1,687 @@
+"""Virtual-client runtime — `A_total` clients on `A_active` device slots.
+
+Pillar four's dense driver keeps every agent on device simultaneously as a
+stacked ``(P, A)`` leaf, which caps the fleet at what HBM holds.  Real
+cross-device fleets are orders of magnitude larger than any per-round
+cohort, so this module decouples the two sizes:
+
+  * :class:`ClientStore` keeps inactive clients' state host-side (numpy
+    rows: params, Adam moments, per-client error-feedback residuals) with
+    copy-on-write over the shared Algorithm-1 init template — a
+    million-client fleet that has touched k clients materializes k rows;
+  * a ``repro.core.participation.ParticipationSchedule`` picks each
+    round's cohort (seeded and stateless, so a resumed run replays the
+    same sequence), and ``repro.data.federated.FleetRounds`` assembles
+    that cohort's round tensor salted by *global* client id;
+  * :class:`VirtualClientDriver` runs the same jitted ``FedGAN.round`` the
+    dense driver runs — compiled once for ``(P, A_active)``, never for
+    ``A_total`` — and pages cohort state between store and slots around
+    it.  Swaps are diff-based (a client keeps its slot while it stays in
+    the cohort; the identity schedule swaps nothing), and the next
+    cohort's rows and batches are uploaded with async ``jax.device_put``
+    while the current round computes, extending
+    ``StreamingFederatedData``'s double-buffered prefetch to *state*;
+  * :class:`StragglerPolicy` ``mode="defer"`` lets a planted-late cohort
+    member's delta merge into a *later* round's average with a staleness
+    decay ``gamma**s`` instead of blocking, and planted drops revert to
+    their pre-round row untouched (see docs/scaling.md for the merge
+    algebra).
+
+With ``A_total == A_active`` and the identity schedule the virtual path
+is bit-identical to the dense ``RoundDriver`` stream path — params, opt
+state, EF residuals and metrics — held by ``tests/test_virtual_clients.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core import strategies as sync_strategies
+from repro.core.participation import ParticipationSchedule
+from repro.data.federated import FleetRounds, round_key_schedule
+from repro.run.driver import RunResult
+
+tmap = jax.tree_util.tree_map
+
+# entries every FedGAN state carries; strategies declare the rest via
+# SyncStrategy.state_axes()
+_BASE_AXES = {"params": "client", "opt_g": "client", "opt_d": "client",
+              "step": "shared"}
+
+
+def state_axes(fed, state) -> dict:
+    """Per-entry paging axis ("client" vs "shared") for a round state."""
+    axes = dict(_BASE_AXES)
+    axes.update(fed.cfg.resolve_strategy().state_axes())
+    unknown = sorted(set(state) - set(axes))
+    if unknown:
+        raise ValueError(
+            f"strategy {fed.cfg.resolve_strategy().name!r} carries round-"
+            f"state entries {unknown} without declaring them per-client or "
+            "shared in SyncStrategy.state_axes(); the ClientStore cannot "
+            "page state it cannot classify")
+    bad = sorted(k for k, v in axes.items() if v not in ("client", "shared"))
+    if bad:
+        raise ValueError(f"state_axes() values must be 'client' or "
+                         f"'shared'; got {[axes[k] for k in bad]} for {bad}")
+    return axes
+
+
+class ClientStore:
+    """Host-side fleet state: one numpy row per *materialized* client,
+    copy-on-write over the shared init template.
+
+    A row is the client-axis slice of the round state — ``{"params": ...,
+    "opt_g": ..., "opt_d": ...}`` (plus per-client strategy entries like
+    the uplink EF residual) with the leading ``(P, A)`` dims stripped.
+    Algorithm 1 starts every client from the same point, so clients that
+    have never participated share ``template`` and cost no memory; the
+    store materializes a private row only on first write-back.
+    """
+
+    def __init__(self, template, n_total: int):
+        self.template = template
+        self.n_total = int(n_total)
+        self._rows: dict[int, Any] = {}
+
+    @classmethod
+    def from_fed(cls, fed, rng, n_total: int) -> "ClientStore":
+        """Build the template from a (1, 1) slot-view init — the same
+        ``task.init(rng)`` the dense init broadcasts, so template rows are
+        bit-identical to a fresh ``fed.init_state(rng)`` slot."""
+        tiny = fed.init_state(rng, agent_grid=(1, 1))
+        axes = state_axes(fed, tiny)
+        client = {k: tiny[k] for k, ax in axes.items() if ax == "client"}
+        # one-time init fetch, before any round is dispatched
+        template = jax.device_get(tmap(lambda x: x[0, 0], client))  # analysis: allow(host-sync)
+        return cls(template, n_total)
+
+    @property
+    def materialized(self) -> int:
+        """Rows holding private state (the copy-on-write high-water mark)."""
+        return len(self._rows)
+
+    def client_ids(self):
+        return sorted(self._rows)
+
+    def row(self, cid: int):
+        return self._rows.get(int(cid), self.template)
+
+    def put(self, cid: int, row) -> None:
+        if not 0 <= int(cid) < self.n_total:
+            raise ValueError(f"client id {cid} outside fleet [0, {self.n_total})")
+        self._rows[int(cid)] = row
+
+    def gather(self, cids):
+        """Stack rows for ``cids`` into a ``(len(cids), ...)`` numpy
+        pytree — the host half of a swap-in.  Flattens each row once and
+        stacks leaf-wise (a per-leaf ``tmap`` over dozens of leaves costs
+        more Python time than the byte copies themselves)."""
+        rows = [self.row(c) for c in cids]
+        treedef = jax.tree.structure(rows[0])
+        cols = zip(*(jax.tree.leaves(r) for r in rows))
+        return jax.tree.unflatten(treedef, [np.stack(c) for c in cols])
+
+    def scatter(self, cids, stacked) -> None:
+        """Write back one row per client from a ``(len(cids), ...)``
+        stacked pytree — the host half of a swap-out."""
+        leaves, treedef = jax.tree.flatten(stacked)  # host numpy by contract
+        for j, c in enumerate(cids):
+            self.put(c, jax.tree.unflatten(
+                treedef, [x[j].copy() for x in leaves]))
+
+
+def plan_swap(slot_clients, next_cohort):
+    """Diff-based slot assignment: clients staying in the cohort keep
+    their slot; leavers' slots are handed to entrants in order.  Returns
+    ``(new_slot_clients, evicted_slots, entering_ids)`` — both lists empty
+    when the cohort is unchanged (the identity-schedule fast path)."""
+    nxt = set(int(c) for c in next_cohort)
+    cur = set(int(c) for c in slot_clients)
+    evicted = [j for j, c in enumerate(slot_clients) if int(c) not in nxt]
+    entering = [int(c) for c in next_cohort if int(c) not in cur]
+    new = [int(c) for c in slot_clients]
+    for j, c in zip(evicted, entering):
+        new[j] = c
+    return new, evicted, entering
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """What to do with planted-late cohort members.
+
+    ``"block"`` (default): the round waits for everyone — late is just
+    slow, only explicit ``"drop"`` faults are excluded (and renormalized
+    away).  ``"defer"``: a late member's delta ``theta_post - theta_pre``
+    is held host-side and merged into the round it arrives in with weight
+    ``decay ** staleness`` (staleness in rounds, >= 1); deltas older than
+    ``max_staleness`` are discarded.  See docs/scaling.md.
+    """
+
+    mode: str = "block"
+    decay: float = 0.5
+    max_staleness: int = 2
+
+    def validate(self) -> None:
+        if self.mode not in ("block", "defer"):
+            raise ValueError(f"straggler mode must be 'block' or 'defer', "
+                             f"got {self.mode!r}")
+        if not 0.0 <= self.decay <= 1.0:
+            raise ValueError(f"staleness decay must be in [0, 1], got {self.decay}")
+        if self.max_staleness < 1:
+            raise ValueError(f"max_staleness must be >= 1, got {self.max_staleness}")
+
+
+def _pad_bucket(items):
+    """Round a swap list up to the next power-of-two length by repeating
+    its first element.  Duplicate gathers read the same row twice and
+    duplicate scatters write the same value twice — both no-ops — while
+    the jit cache behind the paging ops stays O(log slots) deep instead of
+    re-specializing for every distinct swap size."""
+    if not items:
+        return items
+    n = 1
+    while n < len(items):
+        n *= 2
+    return list(items) + [items[0]] * (n - len(items))
+
+
+def _slot_coords(slots, grid):
+    P, A = grid
+    idx = np.asarray(slots, np.int32)  # analysis: allow(host-sync) — python slot list, host planning
+    return idx // A, idx % A
+
+
+@dataclasses.dataclass
+class VirtualClientDriver:
+    """Drives ``n_rounds`` FedGAN rounds over a fleet of
+    ``fleet.num_clients`` virtual clients on ``P * A_active`` device slots
+    (``fed.cfg.agent_grid == (P, A_active)``).
+
+    ``faults`` is the fault-injection hook for the straggler tests:
+    ``faults(round_idx, slot_clients) -> {client_id: "drop" | "late" |
+    "late:<k>"}``.  Fault handling (and any deferred-merge accounting)
+    runs on a split local-train/host-merge path — when ``faults`` is None
+    every round is the same single jitted ``FedGAN.round`` call the dense
+    driver makes, which is what the bit-parity and compile-once tests
+    hold.  ``weighting`` is ``"uniform"`` (the dense default) or
+    ``"dataset"`` (§3.1 ``|R_i| / sum_cohort |R_j|`` from the fleet's true
+    shard sizes, passed as a traced argument so cohorts never retrace).
+    """
+
+    fed: Any
+    fleet: FleetRounds
+    n_rounds: int
+    schedule: ParticipationSchedule = ParticipationSchedule()
+    straggler: StragglerPolicy = StragglerPolicy()
+    faults: Callable | None = None
+    weighting: str = "uniform"
+    log_every: int = 1
+    eval_every: int = 0
+    eval_hooks: Sequence[Callable] = ()
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+    verbose: bool = False
+    donate: bool = True
+
+    def __post_init__(self):
+        P, A = self.fed.cfg.agent_grid
+        self._grid = (P, A)
+        self._slots = P * A
+        if self.fleet.slot_grid != (P, A):
+            raise ValueError(f"fleet slot_grid {self.fleet.slot_grid} != "
+                             f"fed agent_grid {(P, A)}")
+        self.n_total = self.fleet.num_clients
+        self.schedule.validate(self.n_total)
+        self.straggler.validate()
+        if self.weighting not in ("uniform", "dataset"):
+            raise ValueError(f"weighting must be 'uniform' or 'dataset', "
+                             f"got {self.weighting!r}")
+        if self.fed.weights is not None:
+            raise ValueError(
+                "FedGAN.weights is shaped for a fixed (P, A) grid; under "
+                "the virtual scheduler per-round cohort weights come from "
+                "weighting='uniform'|'dataset' instead")
+        strat = self.fed.cfg.resolve_strategy()
+        if getattr(strat, "secure_agg", None) is not None \
+                and self.n_total > self._slots:
+            raise ValueError(
+                "secure_agg= needs every pair's both mask halves on the "
+                "wire; a sampled cohort (A_active < A_total) leaves the "
+                "absent clients' pad halves uncancelled — run the full "
+                "fleet on device (A_total == A_active) or drop secure_agg")
+        if self.faults is not None or self.straggler.mode == "defer":
+            self._check_mergeable(strat)
+        if self.faults is not None and self.ckpt_every:
+            raise ValueError(
+                "checkpointing a fault-injection run is not supported: "
+                "in-flight late deltas are host-side driver state a "
+                "checkpoint does not capture")
+        if self.eval_every and not self.eval_hooks:
+            raise ValueError("eval_every is set but eval_hooks is empty")
+        # memoized executables + a trace counter the compile-once test reads
+        self._round_jit = None
+        self._local_jit = None
+        self._merge_jit = None
+        self._gather_jit = None
+        self._scatter_jit = None
+        self.n_traces = 0
+        self.store: ClientStore | None = None
+        self.slot_clients: list[int] | None = None
+
+    def _check_mergeable(self, strat):
+        """The deferred/fault merge recomputes the round average host-side
+        with per-round weights; that algebra only matches plain weighted
+        FedAvg.  Anything whose sync is not a plain weighted mean of the
+        declared subtrees is refused loudly rather than merged wrongly."""
+        ok = type(strat) in (sync_strategies.FedAvgSync,
+                             sync_strategies.PartialSharing)
+        if not ok or strat.codec is not None or strat.sync_dtype is not None \
+                or strat.secure_agg is not None \
+                or strat.sync_reduce() is not None or strat.average_opt_state:
+            raise ValueError(
+                f"straggler-tolerant merge supports plain FedAvgSync/"
+                f"PartialSharing only (no codec/sync_dtype/secure_agg/"
+                f"robust reduce/average_opt_state): a deferred delta "
+                f"cannot be replayed through {strat.name!r}'s sync — use "
+                f"StragglerPolicy(mode='block') without faults, or "
+                f"simplify the strategy")
+
+    # ------------------------------------------------------------------
+    def cohort(self, round_idx: int) -> np.ndarray:
+        return self.schedule.cohort(round_idx, self.n_total, self._slots)
+
+    def _weights_row(self, slot_clients) -> np.ndarray:
+        """Nominal per-slot weight shares (sum 1) for this cohort."""
+        if self.weighting == "uniform":
+            return np.full(self._slots, 1.0 / self._slots, np.float32)
+        sizes = self.fleet.client_sizes()[np.asarray(slot_clients, np.int64)]  # analysis: allow(host-sync)
+        return (sizes / sizes.sum()).astype(np.float32)
+
+    # -- jitted executables --------------------------------------------
+    def _jit(self, fn, donate=True):
+        if donate and self.donate:
+            return jax.jit(fn, donate_argnums=0)
+        return jax.jit(fn)
+
+    def _round_fn(self):
+        if self._round_jit is None:
+            if self.weighting == "uniform":
+                def fn(st, b, s):
+                    self.n_traces += 1
+                    return self.fed.round(st, b, s)
+            else:
+                def fn(st, b, s, w):
+                    self.n_traces += 1
+                    fed_w = dataclasses.replace(self.fed, weights=w)
+                    return fed_w.round(st, b, s)
+            self._round_jit = self._jit(fn)
+        return self._round_jit
+
+    def _local_fn(self):
+        """The LocalOnly twin: K local steps, no sync — the training half
+        of the split fault/merge path."""
+        if self._local_jit is None:
+            cfg = dataclasses.replace(
+                self.fed.cfg, strategy=sync_strategies.LocalOnly(), mode="",
+                sync_dtype=None, average_opt_state=False)
+            fed_local = dataclasses.replace(self.fed, cfg=cfg)
+
+            def fn(st, b, s):
+                self.n_traces += 1
+                return fed_local.round(st, b, s)
+
+            self._local_jit = self._jit(fn)
+        return self._local_jit
+
+    def _merge_fn(self):
+        """The aggregation half: theta_bar = sum_i w_on[i] * theta_i +
+        extra (the decayed late-delta contribution), broadcast to the
+        slots in ``recv`` (on-time participants); everyone else keeps
+        local values.  ``w_on``/``extra``/``recv`` are traced, so fault
+        patterns never retrace."""
+        if self._merge_jit is None:
+            subtrees = self.fed.cfg.resolve_strategy().subtrees
+
+            def fn(st, w_on, extra, recv):
+                new = dict(st)
+                params = dict(st["params"])
+                for k in subtrees:
+                    def avg1(x, e):
+                        row = jnp.einsum("pa,pa...->...",
+                                         w_on.astype(x.dtype), x)
+                        row = row + e.astype(x.dtype)
+                        return jnp.broadcast_to(row, x.shape)
+                    merged = tmap(avg1, st["params"][k], extra[k])
+                    params[k] = sync_strategies._select(
+                        recv, merged, st["params"][k])
+                new["params"] = params
+                return new
+
+            self._merge_jit = self._jit(fn)
+        return self._merge_jit
+
+    # -- paging --------------------------------------------------------
+    # The gather/scatter pytrees have dozens of leaves; dispatching them as
+    # eager per-leaf ops costs more host time than the round itself, so
+    # both directions run as ONE memoized jit (jax's cache re-specializes
+    # per row-count; `_pad_bucket` in the run loop rounds swap sizes up to
+    # powers of two so that cache stays O(log slots) deep).
+
+    def _fetch_slots(self, state, slots, axes):
+        """Device->host: the client-axis rows currently in ``slots``
+        (stacked pytree, leading len(slots))."""
+        pp, aa = _slot_coords(slots, self._grid)
+        if self._gather_jit is None:
+            def gather(st, pp, aa, keys):
+                return {k: tmap(lambda x: x[pp, aa], st[k]) for k in keys}
+            self._gather_jit = jax.jit(gather, static_argnames=("keys",))
+        keys = tuple(sorted(k for k, ax in axes.items() if ax == "client"))
+        gathered = self._gather_jit(state, pp, aa, keys=keys)
+        # swap-out: synchronizes on the in-flight round's result, which is
+        # exactly the dependency — the evicted rows must be post-round
+        return jax.device_get(gathered)  # analysis: allow(host-sync)
+
+    def _stage_rows(self, entering):
+        """Host->device upload of entering clients' rows (async — overlaps
+        the in-flight round's compute)."""
+        return jax.device_put(self.store.gather(entering))
+
+    def _apply_swap(self, state, slots, staged, axes):
+        """Scatter staged rows into their device slots."""
+        pp, aa = _slot_coords(slots, self._grid)
+        if self._scatter_jit is None:
+            def scatter(st, pp, aa, staged, keys):
+                new = dict(st)
+                for k in keys:
+                    new[k] = tmap(
+                        lambda x, r: x.at[pp, aa].set(r.astype(x.dtype)),
+                        st[k], staged[k])
+                return new
+            self._scatter_jit = jax.jit(scatter, static_argnames=("keys",))
+        keys = tuple(sorted(k for k, ax in axes.items()
+                            if ax == "client" and k in staged))
+        return self._scatter_jit(state, pp, aa,
+                                 {k: staged[k] for k in keys}, keys=keys)
+
+    def flush(self, state) -> None:
+        """Persist every resident slot row into the store (end of run /
+        checkpoint boundary) so the host fleet view is complete."""
+        axes = state_axes(self.fed, state)
+        rows = self._fetch_slots(state, list(range(self._slots)), axes)
+        self.store.scatter(self.slot_clients, rows)
+
+    # ------------------------------------------------------------------
+    def run(self, rng, state=None, *, start_round: int = 0,
+            store=None, slot_clients=None) -> RunResult:
+        """Run rounds ``start_round .. n_rounds-1``.  ``rng`` is the run's
+        root key: the data-key schedule is derived from ``split(rng)[0]``
+        and the init from ``split(rng)[1]`` (the dense driver's exact
+        derivation), so a resumed run — same root ``rng``, restored
+        ``state``/``store``/``slot_clients``, ``start_round`` from the
+        checkpoint — replays the uninterrupted run's cohorts and batches
+        identically."""
+        if not 0 <= start_round < self.n_rounds:
+            raise ValueError(f"start_round {start_round} outside "
+                             f"[0, {self.n_rounds})")
+        data_rng, init_rng = jax.random.split(rng)
+        if state is None:
+            state = self.fed.init_state(init_rng)
+            store = ClientStore.from_fed(self.fed, init_rng, self.n_total)
+        if store is not None:
+            self.store = store
+        if self.store is None:
+            raise ValueError("pass store= (a ClientStore) when resuming "
+                             "from an explicit state")
+        axes = state_axes(self.fed, state)
+        keys = round_key_schedule(data_rng, self.n_rounds)[start_round:]
+
+        # initial cohort: fresh slots are interchangeable (every client is
+        # still the init template), so assignment is free; a resumed run
+        # swaps from the checkpointed assignment to this round's cohort
+        first = self.cohort(start_round)
+        if slot_clients is None:
+            self.slot_clients = [int(c) for c in first]
+        else:
+            self.slot_clients, evicted, entering = plan_swap(slot_clients,
+                                                             first)
+            if evicted:
+                ev, en = _pad_bucket(evicted), _pad_bucket(entering)
+                rows = self._fetch_slots(state, ev, axes)
+                self.store.scatter([slot_clients[j] for j in ev], rows)
+                state = self._apply_swap(state, ev,
+                                         self._stage_rows(en), axes)
+
+        self._evals = []
+        history = []
+        pending = []   # (client_id, delta_row, submit_round, arrival_round, w_share)
+        stats = {"swapped_rows": 0, "late": 0, "dropped": 0,
+                 "merged_deltas": 0, "expired_deltas": 0}
+        gap = 0.0
+        t0 = time.perf_counter()
+        t_host = time.perf_counter()
+
+        batches = self.fleet.round_batches(keys[0], self.slot_clients)
+        staged = None
+        for i, r in enumerate(range(start_round, self.n_rounds)):
+            b, s = batches
+            if self.faults is None:
+                gap += time.perf_counter() - t_host
+                if self.weighting == "uniform":
+                    state, metrics = self._round_fn()(state, b, s)
+                else:
+                    w = jnp.asarray(
+                        self._weights_row(self.slot_clients)).reshape(self._grid)
+                    state, metrics = self._round_fn()(state, b, s, w)
+                t_host = time.perf_counter()
+            else:
+                state, metrics, pending = self._fault_round(
+                    r, state, b, s, pending, axes, stats)
+            history.append(tmap(jnp.mean, metrics))
+
+            # overlap: stage next round's batches + entering rows while
+            # this round's result is still in flight
+            nxt = None
+            if r + 1 < self.n_rounds:
+                nxt_cohort = self.cohort(r + 1)
+                new_slots, evicted, entering = plan_swap(self.slot_clients,
+                                                         nxt_cohort)
+                staged = (self._stage_rows(_pad_bucket(entering))
+                          if entering else None)
+                batches = self.fleet.round_batches(keys[i + 1], new_slots)
+                nxt = (new_slots, evicted, entering)
+
+            state = self._boundaries(state, r, history[-1])
+
+            if nxt is not None:
+                new_slots, evicted, entering = nxt
+                if evicted:
+                    ev = _pad_bucket(evicted)
+                    rows = self._fetch_slots(state, ev, axes)
+                    self.store.scatter(
+                        [self.slot_clients[j] for j in ev], rows)
+                    state = self._apply_swap(state, ev, staged, axes)
+                    stats["swapped_rows"] += len(evicted)
+                self.slot_clients = new_slots
+
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+        gap += time.perf_counter() - t_host
+        total = time.perf_counter() - t0
+        self.flush(state)
+        n_run = self.n_rounds - start_round
+        K = self.fed.cfg.sync_interval
+        timings = {
+            "total_s": total,
+            "steps_per_s": n_run * K / max(total, 1e-9),
+            "rounds_per_s": n_run / max(total, 1e-9),
+            "round_gap_s": gap / max(n_run, 1),
+            "data_kind": "virtual",
+            "a_total": self.n_total,
+            "a_active": self._slots,
+            "store_rows": self.store.materialized,
+            **stats,
+        }
+        history = [tmap(float, m) for m in history]
+        return RunResult(self.fed, state, history, self._evals, timings)
+
+    # -- straggler / fault path ----------------------------------------
+    def _parse_fault(self, kind: str) -> tuple[str, int]:
+        if kind == "drop":
+            return "drop", 0
+        if kind == "late":
+            return "late", 1
+        if kind.startswith("late:"):
+            return "late", int(kind.split(":", 1)[1])
+        raise ValueError(f"unknown fault {kind!r}; use 'drop', 'late' or "
+                         "'late:<rounds>'")
+
+    def _fault_round(self, r, state, b, s, pending, axes, stats):
+        """One round on the split path: K local steps (no sync), then the
+        host-orchestrated merge that excludes drops, defers late deltas
+        and folds in pending ones — docs/scaling.md gives the algebra."""
+        faults = {int(c): self._parse_fault(k)
+                  for c, k in (self.faults(r, list(self.slot_clients)) or {}).items()}
+        unknown = sorted(set(faults) - set(self.slot_clients))
+        if unknown:
+            raise ValueError(f"faults for clients {unknown} not in this "
+                             f"round's cohort {self.slot_clients}")
+        if faults and self.straggler.mode == "block":
+            # blocking mode waits for the late — only drops are excluded
+            faults = {c: (m, d) for c, (m, d) in faults.items() if m == "drop"}
+        slot_of = {c: j for j, c in enumerate(self.slot_clients)}
+        fault_slots = [slot_of[c] for c in sorted(faults)]
+        pre = (self._fetch_slots(state, fault_slots, axes)
+               if fault_slots else None)
+
+        state, metrics = self._local_fn()(state, b, s)
+
+        w_row = self._weights_row(self.slot_clients)
+        on_time = np.ones(self._slots, bool)
+        post_fault = (self._fetch_slots(state, fault_slots, axes)
+                      if fault_slots else None)
+        revert_slots = []
+        for j, c in enumerate(sorted(faults)):
+            mode, delay = faults[c]
+            slot = fault_slots[j]
+            on_time[slot] = False
+            pre_row = tmap(lambda x: x[j], pre)
+            post_row = tmap(lambda x: x[j], post_fault)
+            if mode == "drop":
+                stats["dropped"] += 1
+                # never completed the round: state unchanged, on host and
+                # in its device slot
+                self.store.put(c, pre_row)
+                revert_slots.append((slot, pre_row))
+            else:
+                stats["late"] += 1
+                # trained but the delta arrives `delay` rounds from now;
+                # the client itself keeps its local trained state (it
+                # never receives this round's broadcast)
+                self.store.put(c, post_row)
+                delta = tmap(np.subtract, post_row["params"],
+                             pre_row["params"])
+                # w_row is host numpy (never traced) — no device sync here
+                pending.append((c, delta, r, r + delay, float(w_row[slot])))  # analysis: allow(host-sync)
+
+        # drain pending deltas that arrive this round
+        strat = self.fed.cfg.resolve_strategy()
+        extra = {k: tmap(lambda x: np.zeros(x.shape[2:], np.float32),
+                         state["params"][k]) for k in strat.subtrees}
+        still = []
+        for (c, delta, submitted, arrival, w_share) in pending:
+            if arrival > r:
+                still.append((c, delta, submitted, arrival, w_share))
+                continue
+            staleness = r - submitted
+            if staleness > self.straggler.max_staleness:
+                stats["expired_deltas"] += 1
+                continue
+            stats["merged_deltas"] += 1
+            scale = w_share * self.straggler.decay ** staleness
+            for k in strat.subtrees:
+                extra[k] = tmap(lambda e, d: e + scale * d,
+                                extra[k], delta[k])
+
+        if not on_time.any():
+            raise ValueError(f"round {r}: every cohort member faulted — "
+                             "no on-time participants to average")
+        w_on = w_row * on_time
+        w_on = (w_on / w_on.sum()).reshape(self._grid)
+        recv = jnp.asarray(on_time.reshape(self._grid))
+        state = self._merge_fn()(state, jnp.asarray(w_on),
+                                 jax.device_put(extra), recv)
+        for slot, row in revert_slots:
+            staged = tmap(lambda x: x[None], row)
+            state = self._apply_swap(state, [slot], staged, axes)
+        return state, metrics, still
+
+    # -- boundaries ----------------------------------------------------
+    def _boundaries(self, state, r, metrics_dev):
+        K = self.fed.cfg.sync_interval
+        last = r == self.n_rounds - 1
+        if self.log_every and self.verbose and (r % self.log_every == 0 or last):
+            m = tmap(float, metrics_dev)  # analysis: allow(host-sync)
+            d, g = m.get("d_loss"), m.get("g_loss")
+            head = self.slot_clients[:8]
+            tail = "" if len(self.slot_clients) <= 8 else \
+                f" +{len(self.slot_clients) - 8}"
+            print(f"round {r:5d}/{self.n_rounds} step {(r + 1) * K:6d} "
+                  f"d_loss={d:.4f} g_loss={g:.4f} "
+                  f"cohort={head}{tail}", flush=True)
+        if self.eval_every and ((r + 1) % self.eval_every == 0 or last):
+            scores = {}
+            for hook in self.eval_hooks:
+                scores.update(hook(self.fed, state, r))
+            self._evals.append({"round": r, "step": (r + 1) * K, **scores})
+        if self.ckpt_dir and self.ckpt_every and (r + 1) % self.ckpt_every == 0:
+            self.save_fleet_checkpoint(self.ckpt_dir, state, r)
+        return state
+
+    # -- checkpointing -------------------------------------------------
+    def save_fleet_checkpoint(self, directory: str, state, r: int) -> str:
+        """One checkpoint = the device slot state + the *whole* host fleet
+        (materialized rows + template).  The participation RNG needs no
+        state beyond (seed, round): the schedule is stateless, which is
+        what makes resume replay the exact cohort sequence."""
+        self.flush(state)
+        payload = {
+            "device": state,
+            "template": self.store.template,
+            "fleet": {str(c): self.store._rows[c]
+                      for c in self.store.client_ids()},
+        }
+        meta = {
+            "round": r,
+            "K": self.fed.cfg.sync_interval,
+            "virtual": True,
+            "a_total": self.n_total,
+            "slot_clients": [int(c) for c in self.slot_clients],
+            "participation_seed": self.schedule.seed,
+        }
+        return save_checkpoint(directory, payload,
+                               step=(r + 1) * self.fed.cfg.sync_interval,
+                               metadata=meta)
+
+
+def load_fleet_checkpoint(directory: str, *, step: int | None = None):
+    """Restore a virtual-client checkpoint: ``(state, store, slot_clients,
+    next_round, metadata)``.  Fleet rows stay host-side numpy; only the
+    ``(P, A_active)`` slot state goes back to device."""
+    payload, manifest = restore_checkpoint(directory, step=step,
+                                           to_device=False)
+    meta = manifest["metadata"]
+    if not meta.get("virtual"):
+        raise ValueError(f"{directory} is not a virtual-client checkpoint "
+                         "(no fleet state); use restore_checkpoint")
+    state = tmap(jnp.asarray, payload["device"])
+    store = ClientStore(payload["template"], meta["a_total"])
+    for cid, row in payload["fleet"].items():
+        store.put(int(cid), row)
+    return (state, store, list(meta["slot_clients"]),
+            int(meta["round"]) + 1, meta)

@@ -1,0 +1,22 @@
+"""Planted violations in a virtual-client paging loop (fixture for
+tests/test_analysis.py).
+
+The real ``repro.run.virtual`` pages rows between device slots and the
+host store; every legitimate sync there sits behind an
+``analysis: allow(host-sync)`` waiver.  This twin plants the two bugs
+the lint exists to catch in that loop: an unwaivered per-round
+``device_get`` (blocks the in-flight round instead of overlapping) and
+a ``float()`` on a traced weight row."""
+import jax
+
+
+def leaky_swap_out(state, slots, w_row, slot):
+    rows = jax.device_get(state)                # line 14: per-round D2H sync
+    share = float(w_row[slot])                  # line 15: traced-scalar sync
+    return rows, share
+
+
+def overlapped_swap_out(state):
+    # the sanctioned pattern: one fetch, after the round result is in
+    rows = jax.device_get(state)  # analysis: allow(host-sync)
+    return rows

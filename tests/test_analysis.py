@@ -42,11 +42,14 @@ def test_host_sync_catches_each_call_form_at_its_line():
     findings = run_lint(ctx_for("hostsync"), rules=["host-sync"])
     got = {(f.file, f.line) for f in findings}
     rel = "src/repro/core/hot.py"
+    virt = "src/repro/run/virtual.py"
     expected = {
         (rel, line_of(root, rel, "float(metrics")),
         (rel, line_of(root, rel, '.item()')),
         (rel, line_of(root, rel, "np.asarray(metrics")),
         (rel, line_of(root, rel, "jax.device_get(state)                ")),
+        (virt, line_of(root, virt, "per-round D2H sync")),
+        (virt, line_of(root, virt, "traced-scalar sync")),
     }
     assert got == expected, findings
     assert all(f.rule == "host-sync" for f in findings)

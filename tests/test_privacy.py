@@ -547,6 +547,17 @@ def test_secure_refusal_matrix():
                    sync_dtype=jnp.bfloat16).validate(cfg)
     with pytest.raises(ValueError, match="dropouts"):
         SubsampledFedAvg(secure_agg=SecureAgg()).validate(cfg)
+    # the virtual-client scheduler is subsampling by other means: a sampled
+    # cohort (A_active < A_total) leaves absent clients' pad halves
+    # uncancelled, so the driver must refuse at construction — while the
+    # full fleet on device (A_total == A_active) stays legal
+    from repro.data import FleetRounds
+    from repro.run import VirtualClientDriver
+    shards = [{"x": jnp.ones((8, 3))} for _ in range(8)]
+    fed_sec = _fed(FedAvgSync(secure_agg=SecureAgg()))
+    with pytest.raises(ValueError, match="uncancelled"):
+        VirtualClientDriver(fed_sec, FleetRounds(shards, (1, 4), 8, 4), 2)
+    VirtualClientDriver(fed_sec, FleetRounds(shards[:4], (1, 4), 8, 4), 2)
     for robust in (TrimmedMeanSync, CoordinateMedianSync):
         with pytest.raises(ValueError, match="secure sum hides"):
             robust(secure_agg=SecureAgg()).validate(cfg)

@@ -211,6 +211,39 @@ def test_subsampled_bytes_scale_with_participation():
     assert half == full // 2
 
 
+def test_subsampled_mask_seed_shim_warns_and_matches_schedule():
+    """The old ``mask_seed=`` knob is a deprecation shim over the shared
+    ParticipationSchedule: it must warn loudly and produce the bit-exact
+    trajectory of ``schedule=ParticipationSchedule(seed=...)``."""
+    from repro.core.participation import ParticipationSchedule
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy = SubsampledFedAvg(fraction=0.5, mask_seed=42)
+    assert any(issubclass(w.category, DeprecationWarning)
+               and "mask_seed" in str(w.message) for w in rec)
+    assert legacy.resolve_schedule() == ParticipationSchedule(seed=42)
+
+    new = SubsampledFedAvg(fraction=0.5,
+                           schedule=ParticipationSchedule(seed=42))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old_state, _ = _run_round(_fed(legacy, grid=(1, 4)), n_rounds=3)
+    new_state, _ = _run_round(_fed(new, grid=(1, 4)), n_rounds=3)
+    for a, b in zip(jax.tree_util.tree_leaves(old_state),
+                    jax.tree_util.tree_leaves(new_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_subsampled_mask_seed_and_schedule_conflict():
+    from repro.core.participation import ParticipationSchedule
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        strat = SubsampledFedAvg(mask_seed=1,
+                                 schedule=ParticipationSchedule(seed=2))
+        with pytest.raises(ValueError, match="competing seed streams"):
+            strat.validate(FedGANConfig(agent_grid=(1, 4), sync_interval=4))
+
+
 # ---------------------------------------------------------------------------
 # AdaptiveK: warmup-K schedule across rounds
 # ---------------------------------------------------------------------------
