@@ -2,8 +2,9 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast lint analyze bench bench-dryrun bench-serve \
-        bench-rounds bench-comm bench-privacy bench-agents sweep sweep-comm \
-        sweep-privacy docs-check quickstart serve-example strategies-parity
+        bench-rounds bench-comm bench-privacy bench-agents bench-roofline \
+        sweep sweep-comm sweep-privacy docs-check quickstart serve-example \
+        strategies-parity
 
 # Tier-1 gate: the full suite.  Multi-device sharding checks spawn their own
 # subprocesses with --xla_force_host_platform_device_count=8.
@@ -20,7 +21,7 @@ test-fast:
 # refusal-matrix, catalogue drift) against the committed baseline.
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint, repro.run, repro.run.experiments, repro.data, repro.evals, repro.comm, repro.kernels.qpack.ops"
+	$(PY) -c "import repro, repro.dist, repro.launch.steps, repro.launch.dryrun, repro.configs, repro.models, repro.core, repro.kernels, repro.serve, repro.checkpoint, repro.run, repro.run.experiments, repro.data, repro.evals, repro.comm, repro.kernels.qpack.ops, repro.kernels.qsync.ops"
 	$(PY) -m repro.analysis --rules lint
 
 # The full two-layer static-analysis pass: AST lint + jaxpr trace audit +
@@ -64,6 +65,14 @@ bench-comm:
 # masked-sync overhead + wire accounting.  BENCH_privacy.json artifact.
 bench-privacy:
 	$(PY) benchmarks/run.py --only privacy --fast --json
+
+# Per-kernel roofline rows (qpack pack/unpack, fedavg, fused qsync, fused
+# adam+sync: achieved GB/s + elems/s vs a measured copy roofline) plus the
+# fused-vs-composed dispatch-count row, no dry-run artifacts needed.
+# BENCH_roofline.json artifact; CI gates the quantize-site counts (the
+# 2-core container's wall-clock is noise — see benchmarks/ROOFLINE.md).
+bench-roofline:
+	$(PY) benchmarks/run.py --only roofline --fast --json
 
 # Virtual-client fleet scaling: dense-vs-identity overhead + rounds/s
 # flatness 16 -> 1024 registered clients at a 16-slot cohort, with

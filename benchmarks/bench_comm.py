@@ -128,10 +128,12 @@ def bench_codec_throughput(fast=False):
     """Encode/decode throughput of the qpack path, kernel (interpret mode
     off-TPU) vs vectorized ref — the codec cost a round_sync actually pays.
     Overhead-dominated on purpose: small fixed streams, MB/s derived."""
-    from repro.kernels.qpack.ops import dequantize_blocks, quantize_blocks
+    from repro.kernels.qpack.ops import (_use_kernel_default,
+                                         dequantize_blocks, quantize_blocks)
     n = 1 << 14 if fast else 1 << 16
     x = jax.random.normal(jax.random.key(0), (8, n))
     mb = x.size * 4 / 1e6
+    default_kern = _use_kernel_default()
     for bits in (8, 4):
         for label, kern in (("ref", False), ("kernel", True)):
             enc = jax.jit(lambda v, b=bits, k=kern: quantize_blocks(
@@ -140,11 +142,19 @@ def bench_codec_throughput(fast=False):
             dec = jax.jit(lambda qq, ss, b=bits, k=kern: dequantize_blocks(
                 qq, ss, n=n, bits=b, use_kernel=k))
             _, us_d = timed(dec, q, s)
+            # record which path this row actually exercised: `path` is the
+            # implementation forced here, `is_default_path` whether a
+            # round_sync with use_kernel=None would have run the same one
+            # on this backend (on the CPU CI host the kernel rows time
+            # interpret mode, which the default never picks)
             emit(f"comm_codec_int{bits}_{label}", us,
                  f"encode_MBps={mb / (us / 1e6):.0f};"
-                 f"decode_MBps={mb / (us_d / 1e6):.0f}",
+                 f"decode_MBps={mb / (us_d / 1e6):.0f};path={label}",
                  encode_mb_per_s=round(mb / (us / 1e6), 1),
-                 decode_mb_per_s=round(mb / (us_d / 1e6), 1))
+                 decode_mb_per_s=round(mb / (us_d / 1e6), 1),
+                 path=label,
+                 backend=jax.default_backend(),
+                 is_default_path=(kern == default_kern))
 
 
 def bench_hlo_audit(results_dir="results/dryrun"):

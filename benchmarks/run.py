@@ -57,7 +57,7 @@ def main() -> None:
                                bench_timeseries.bench_ev(steps=200 if fast else 600)),
         "comm": lambda: bench_comm.main(fast=fast),
         "lemmas": bench_lemmas.main,
-        "roofline": bench_roofline.main,
+        "roofline": lambda: bench_roofline.main(fast=fast),
         "kernels": bench_kernels.main,
         "serve": lambda: bench_serve.main(fast=fast),
         "rounds": lambda: bench_rounds.main(fast=fast),

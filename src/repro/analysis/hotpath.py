@@ -21,6 +21,14 @@ and its post-SPMD collectives audited via
   with the none cell is compiler noise, not a semantic invariant.
 * bf16 cell — the dominant once-per-round agent-axis collective must
   actually carry bf16 operands (the declared cast reached the wire).
+* fused vs composed — ``coded_sync`` auto-fuses codec cells through the
+  bucketed qsync path (``fused_sync=None``), so the plain int8/int4 cells
+  now audit the FUSED pipeline; fedgan additionally gets explicit
+  ``int8_composed``/``int4_composed`` cells (``fused_sync=False``) so the
+  per-leaf composed pipeline stays audited too.  Both variants face the
+  same checks: no codec-introduced narrow dtypes on the agent axis, and
+  billed bytes strictly < the none cell (the fusion changes dispatch
+  structure, never the §3.2 bill).
 
 Cells that the design space REFUSES (``TypeError`` at construction,
 ``ValueError`` from ``validate``) are recorded as ``refused`` and count
@@ -83,7 +91,10 @@ def _canonical_strategies():
 
 
 def _make_strategy(cls, codec: str):
-    """May raise TypeError (field absent) / ValueError — a refused cell."""
+    """May raise TypeError (field absent) / ValueError — a refused cell.
+    A ``_composed`` suffix (``int8_composed``) pins ``fused_sync=False``
+    so the per-leaf composed pipeline is compiled instead of the bucketed
+    fused default."""
     import jax.numpy as jnp
 
     from repro.comm.codecs import CODECS
@@ -93,7 +104,10 @@ def _make_strategy(cls, codec: str):
     if codec == "bf16":
         kwargs["sync_dtype"] = jnp.bfloat16
     elif codec != "none":
-        kwargs["codec"] = CODECS[codec]()
+        base, _, variant = codec.partition("_")
+        kwargs["codec"] = CODECS[base]()
+        if variant == "composed":
+            kwargs["fused_sync"] = False
     return cls(**kwargs)
 
 
@@ -197,10 +211,13 @@ def run_wire_matrix(root: str | None = None, *, names=None, codecs=None,
             cell = _build_cell(name, cls, codec, mesh, cfg, shape, K)
             per_codec[codec] = cell
             cells.append(cell)
-        if name == "fedgan" and (not codecs or "bf16" in codecs):
-            cell = _build_cell(name, cls, "bf16", mesh, cfg, shape, K)
-            per_codec["bf16"] = cell
-            cells.append(cell)
+        if name == "fedgan":
+            for extra in ("bf16", "int8_composed", "int4_composed"):
+                if codecs and extra not in codecs:
+                    continue
+                cell = _build_cell(name, cls, extra, mesh, cfg, shape, K)
+                per_codec[extra] = cell
+                cells.append(cell)
         findings.extend(_cell_findings(per_codec, cls, root))
 
     findings.sort(key=lambda f: (f.file, f.line, f.message))
@@ -227,7 +244,7 @@ def _cell_findings(per_codec: dict, cls, root: str) -> list:
                             "wider than the declared f32 wire (silent "
                             "widening doubles the §3.2 bytes)"))
 
-        if codec in ("int8", "int4") and none_cell is not None \
+        if codec.startswith(("int8", "int4")) and none_cell is not None \
                 and none_cell.status == "ok":
             # (2) codecs decode locally: the quantized image must never
             # cross the agent axis — a narrow operand the none cell does

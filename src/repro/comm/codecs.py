@@ -82,6 +82,13 @@ class Codec:
         """Total per-leaf wire bytes: payload + all meta."""
         return self.meta_wire_bytes(like) + _nbytes(self.payload_like(like))
 
+    def fused_sync_spec(self):
+        """Kwargs for the one-pass fused sync (``kernels/qsync``) when this
+        codec's roundtrip can run inside it, else None.  Only the plain
+        block quantizers qualify today — chains and sparsifiers reshape the
+        payload and fall back to the composed per-leaf pipeline."""
+        return None
+
 
 def _flat(x, batch_ndims):
     lead = x.shape[:batch_ndims]
@@ -143,6 +150,10 @@ class IntQuant(Codec):
         # is a kernel-tiling artifact
         n = _like_n(like)
         return jax.ShapeDtypeStruct(((n * self.bits + 7) // 8,), jnp.int8)
+
+    def fused_sync_spec(self):
+        return {"bits": self.bits, "block": self.block,
+                "use_kernel": self.use_kernel}
 
     def meta_wire_bytes(self, like) -> int:
         n_blocks = -(-_like_n(like) // self.block)

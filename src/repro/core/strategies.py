@@ -71,7 +71,8 @@ def _select(mask, new, old):
 
 
 def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
-            codec=None, error_feedback=True, reduce=None, secure_agg=None):
+            codec=None, error_feedback=True, reduce=None, secure_agg=None,
+            fused=None):
     """The eq. (2)+(3) aggregation restricted to ``subtrees`` (and optionally
     a participation ``mask``): weighted average over (P, A), broadcast back.
     Non-participating agents keep their local values (including their
@@ -115,7 +116,8 @@ def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
             synced, e2, ed2 = collectives.coded_sync(
                 state["params"][k], w, codec,
                 ef=ef[k] if use_ef else None,
-                ef_down=ef_down[k] if use_ef else None, reduce=reduce)
+                ef_down=ef_down[k] if use_ef else None, reduce=reduce,
+                fused=fused)
             if mask is not None:
                 synced = _select(mask, synced, state["params"][k])
                 if use_ef:
@@ -135,7 +137,8 @@ def _fedavg(fed, state, *, subtrees, average_opt_state, sync_dtype, mask=None,
                 # optimizer moments ride the coded wire too, but without
                 # residuals — the moments are re-estimated every step anyway
                 synced, _, _ = collectives.coded_sync(state[_OPT_KEY[k]], w,
-                                                      codec, reduce=reduce)
+                                                      codec, reduce=reduce,
+                                                      fused=fused)
                 new[_OPT_KEY[k]] = (synced if mask is None else
                                     _select(mask, synced, state[_OPT_KEY[k]]))
     return new
@@ -201,6 +204,14 @@ class FedAvgSync(SyncStrategy):
     are mutually exclusive (no double compression — chain codecs with
     ``repro.comm.Sequential`` instead).
 
+    ``fused_sync`` picks the execution path of the coded sync (values on
+    the wire are identical either way): ``None`` (default) lets
+    ``collectives.coded_sync`` auto-fuse float32 leaves through the
+    one-pass bucketed ``kernels/qsync`` kernels whenever the codec supports
+    it; ``False`` forces the composed per-leaf pipeline; ``True`` requires
+    the fused path (raises at validate time when the codec or a robust
+    reduce cannot ride it).
+
     ``secure_agg`` (a ``repro.privacy.SecureAgg``) routes the sync through
     ``collectives.masked_sync``: pairwise one-time-pad masking of the wire
     image with the §3.1 weight folded in agent-side (weight-then-mask — a
@@ -217,6 +228,7 @@ class FedAvgSync(SyncStrategy):
     codec: Any = None
     error_feedback: bool = True
     secure_agg: Any = None
+    fused_sync: Any = None
     name = "fedgan"
 
     def validate(self, cfg):
@@ -231,6 +243,21 @@ class FedAvgSync(SyncStrategy):
                     "codec= and sync_dtype= are both wire compressions; "
                     "pick one (chain codecs with repro.comm.Sequential "
                     "instead of stacking a dtype cast on top)")
+        if self.fused_sync:
+            if self.codec is None:
+                raise ValueError(
+                    "fused_sync=True needs a codec= — the fused path IS the "
+                    "coded sync; the plain average has nothing to fuse")
+            if self.codec.fused_sync_spec() is None:
+                raise ValueError(
+                    f"fused_sync=True needs a codec with a fused_sync_spec; "
+                    f"{self.codec.name!r} reshapes the payload and can only "
+                    "run the composed per-leaf pipeline")
+            if self.sync_reduce() is not None:
+                raise ValueError(
+                    "fused_sync=True cannot apply a robust reduce: the "
+                    "fused kernel hard-wires the weighted mean — drop "
+                    "fused_sync or fall back to the composed pipeline")
         if self.secure_agg is not None:
             self.secure_agg.validate()
             if self.codec is not None:
@@ -281,7 +308,8 @@ class FedAvgSync(SyncStrategy):
                        error_feedback=self.error_feedback,
                        mask=self.participation_mask(fed, state),
                        reduce=self.sync_reduce(),
-                       secure_agg=self.secure_agg)
+                       secure_agg=self.secure_agg,
+                       fused=self.fused_sync)
 
     def bytes_per_round(self, cfg, params, opt=None) -> int:
         wire = sum(collectives.sync_bytes(params[k],

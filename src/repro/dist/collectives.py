@@ -26,6 +26,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.qsync import ops as qsync_ops
+
 tmap = jax.tree_util.tree_map
 
 
@@ -214,7 +216,8 @@ def average_intra_pod(tree, weights):
     return tmap(avg, tree)
 
 
-def coded_sync(tree, weights, codec, *, ef=None, ef_down=None, reduce=None):
+def coded_sync(tree, weights, codec, *, ef=None, ef_down=None, reduce=None,
+               fused=None):
     """The full compressed intermediary sync for one subtree.
 
     Per inexact leaf: the agent adds its carried residual (``ef``), encodes
@@ -230,28 +233,68 @@ def coded_sync(tree, weights, codec, *, ef=None, ef_down=None, reduce=None):
     ``reduce`` swaps the weighted mean at the decode→aggregate point for a
     pluggable per-leaf aggregate (e.g. :func:`make_robust_reduce`) — the
     robust statistics then run on the decoded per-agent wire images.
+
+    ``fused`` selects the one-pass path: ``None`` (default) auto-fuses the
+    float32 leaves through the bucketed ``kernels/qsync`` pass whenever the
+    codec advertises a ``fused_sync_spec()`` and no custom ``reduce`` is
+    installed; ``False`` forces the composed per-leaf pipeline; ``True``
+    *requires* the fused path and raises when the codec or reduce cannot
+    ride it.  Fused or composed, the wire values, billed bytes and EF
+    residuals are bit-identical — the fused kernels reuse the exact qpack
+    arithmetic and reduce in the weights' grid shape (the pure-jnp
+    ``kernels/qsync/ref.py`` oracle is the parity proof).  Leaves the fused
+    kernel cannot take (non-f32, or missing the (P, A) grid) fall back to
+    the composed loop leaf by leaf.
     """
+    spec = getattr(codec, "fused_sync_spec", lambda: None)()
+    fusable = spec is not None and reduce is None
+    if fused is None:
+        fused = fusable
+    elif fused and not fusable:
+        raise ValueError(
+            "fused=True needs a codec with a fused_sync_spec "
+            f"(got {getattr(codec, 'name', codec)!r}) and the default "
+            "weighted-mean reduce" if reduce is None else
+            "fused=True cannot apply a custom reduce: the fused kernel "
+            "hard-wires the weighted mean")
     reduce = weighted_mean if reduce is None else reduce
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     e_leaves = (jax.tree_util.tree_leaves(ef) if ef is not None
                 else [None] * len(leaves))
     ed_leaves = (jax.tree_util.tree_leaves(ef_down) if ef_down is not None
                  else [None] * len(leaves))
-    outs, new_e, new_ed = [], [], []
-    for x, e, ed in zip(leaves, e_leaves, ed_leaves):
+    outs = [None] * len(leaves)
+    new_e = [None] * len(leaves)
+    new_ed = [None] * len(leaves)
+    fuse_idx = [i for i, x in enumerate(leaves)
+                if fused and qsync_ops.fusable_leaf(x)]
+    fuse_set = set(fuse_idx)
+    for i, (x, e, ed) in enumerate(zip(leaves, e_leaves, ed_leaves)):
+        if i in fuse_set:
+            continue
         if not jnp.issubdtype(x.dtype, jnp.inexact):
-            outs.append(x)
-            new_e.append(e)
-            new_ed.append(ed)
+            outs[i] = x
+            new_e[i] = e
+            new_ed[i] = ed
             continue
         y = x + e if e is not None else x
         q = codec.roundtrip(y, batch_ndims=2)           # uplink wire image
         m = reduce(q, weights)
         yd = m + ed if ed is not None else m
         qd = codec.roundtrip(yd)                        # downlink wire image
-        outs.append(jnp.broadcast_to(qd.astype(x.dtype), x.shape))
-        new_e.append(y - q if e is not None else None)
-        new_ed.append(yd - qd if ed is not None else None)
+        outs[i] = jnp.broadcast_to(qd.astype(x.dtype), x.shape)
+        new_e[i] = y - q if e is not None else None
+        new_ed[i] = yd - qd if ed is not None else None
+    if fuse_idx:
+        # ONE bucketed dispatch for the whole fusable group — O(1) launches
+        # instead of O(leaves); see kernels/qsync/ops.qsync_leaves
+        f_out, f_ne, f_ned = qsync_ops.qsync_leaves(
+            [leaves[i] for i in fuse_idx], weights,
+            [e_leaves[i] for i in fuse_idx] if ef is not None else None,
+            [ed_leaves[i] for i in fuse_idx] if ef_down is not None else None,
+            **spec)
+        for j, i in enumerate(fuse_idx):
+            outs[i], new_e[i], new_ed[i] = f_out[j], f_ne[j], f_ned[j]
     unflat = jax.tree_util.tree_unflatten
     return (unflat(treedef, outs),
             unflat(treedef, new_e) if ef is not None else None,

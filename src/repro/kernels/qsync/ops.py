@@ -1,0 +1,198 @@
+"""Public entry points for the fused coded sync.
+
+``qsync_flat`` runs one agent-stacked flat stream through the fused
+EF-add → quantize → dequantize → weighted-reduce → re-encode pass, padding
+to the block multiple like ``qpack.ops`` and trimming the tiling lanes on
+the way out.  Like the other kernel packages, ``use_kernel=None`` picks the
+Pallas kernel on a real TPU backend and the vectorized ref oracle
+elsewhere, so the jitted round on CPU never pays interpret-mode overhead.
+
+``qsync_leaves`` is the flatten-once leaf bucketer (the ``ClientStore``
+gather/scatter trick applied to ``coded_sync``): every f32 leaf of a
+(P, A)-stacked subtree is flattened to (B, n_i), padded PER LEAF to the
+block multiple, and concatenated into one (B, N_flat) buffer — so syncing a
+whole subtree is a constant number of dispatches instead of O(leaves).
+Padding each leaf before concatenating (rather than once at the end)
+preserves every leaf's block boundaries, which is what keeps the bucketed
+sync bit-identical to the per-leaf composed pipeline: the quantizer sees
+exactly the same tiles either way, and the zero pad lanes neither move a
+block's max-abs nor survive the trim.
+
+``adam_sync_flat`` / ``adam_sync_tree`` fuse the K-th local Adam step with
+the uplink wire cast (moment update + bias-corrected step + block quantize
+of the new params in one pass); the tree form buckets the leaves the same
+way and returns the wire image of the bucketed stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsync import kernel, ref
+
+
+def _use_kernel_default() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _check(bits: int, block: int):
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if block < 2 or block % 2:
+        raise ValueError(f"block must be even and >= 2, got {block}")
+
+
+def qsync_flat(weights, stacked, ef=None, ef_down=None, *, bits: int = 8,
+               block: int = 128, use_kernel: bool | None = None):
+    """Fused coded sync of one flat stream: weights shaped like the agent
+    grid ((P, A) or (B,)), stacked (B, n) f32 (any n), optional uplink
+    residual ef (B, n) and downlink residual ef_down (n,).  Returns
+    ``(synced (n,), new_ef | None, new_ef_down | None)`` — bit-identical
+    to the composed roundtrip→weighted_mean→roundtrip pipeline (the
+    reduce runs in the weights' grid shape, see ``ref.qsync_flat_ref``)."""
+    _check(bits, block)
+    kern = _use_kernel_default() if use_kernel is None else use_kernel
+    qmax = 2 ** (bits - 1) - 1
+    B, n = stacked.shape
+    pad = (-n) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        if ef is not None:
+            ef = jnp.pad(ef, ((0, 0), (0, pad)))
+        if ef_down is not None:
+            ef_down = jnp.pad(ef_down, (0, pad))
+    if kern:
+        synced, ne, ned = kernel.qsync_flat(weights, stacked, ef, ef_down,
+                                            qmax=qmax, block=block,
+                                            interpret=_interpret())
+    else:
+        synced, ne, ned = ref.qsync_flat_ref(weights, stacked, ef, ef_down,
+                                             qmax=qmax, block=block)
+    return (synced[:n],
+            ne[:, :n] if ne is not None else None,
+            ned[:n] if ned is not None else None)
+
+
+def fusable_leaf(x) -> bool:
+    """Whether a leaf can ride the fused path: (P, A)-stacked float32 (the
+    kernel reduces in f32 — a bf16 leaf would reduce wider than the
+    composed pipeline, breaking bit parity, so it falls back)."""
+    return (hasattr(x, "dtype") and x.dtype == jnp.float32
+            and getattr(x, "ndim", 0) >= 2)
+
+
+def _bucket(leaves, B: int, block: int):
+    """[(B, ...)] -> one (B, N_flat) buffer + per-leaf (offset, n) spans.
+    Each leaf is padded to its own block multiple before concatenation so
+    block boundaries match the per-leaf pipeline exactly."""
+    cols, spans, off = [], [], 0
+    for x in leaves:
+        flat = x.reshape(B, -1)
+        n = flat.shape[1]
+        pad = (-n) % block
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        cols.append(flat)
+        spans.append((off, n))
+        off += n + pad
+    return (cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1),
+            spans)
+
+
+def qsync_leaves(leaves, weights, ef_leaves=None, ef_down_leaves=None, *,
+                 bits: int = 8, block: int = 128,
+                 use_kernel: bool | None = None):
+    """Bucketed fused sync of a group of (P, A, ...) f32 leaves: O(1)
+    dispatches for the whole group.  ``ef_leaves`` match the leaves'
+    shapes; ``ef_down_leaves`` their per-agent shapes (leaf.shape[2:]).
+    Returns ``(synced, new_ef, new_ef_down)`` leaf lists — synced leaves
+    broadcast back over the agent grid like ``coded_sync``."""
+    _check(bits, block)
+    B = int(weights.size)
+    stacked, spans = _bucket(leaves, B, block)
+    ef = None
+    if ef_leaves is not None:
+        ef, _ = _bucket(ef_leaves, B, block)
+    ef_down = None
+    if ef_down_leaves is not None:
+        ef_down, _ = _bucket([e[None] for e in ef_down_leaves], 1, block)
+        ef_down = ef_down[0]
+    synced, ne, ned = qsync_flat(weights, stacked, ef, ef_down, bits=bits,
+                                 block=block, use_kernel=use_kernel)
+    outs, new_e, new_ed = [], [], []
+    for x, (off, n) in zip(leaves, spans):
+        seg = synced[off:off + n]
+        outs.append(jnp.broadcast_to(seg.reshape(x.shape[2:]), x.shape))
+        new_e.append(ne[:, off:off + n].reshape(x.shape)
+                     if ne is not None else None)
+        new_ed.append(ned[off:off + n].reshape(x.shape[2:])
+                      if ned is not None else None)
+    return outs, new_e, new_ed
+
+
+def adam_sync_flat(params, grads, mu, nu, *, lr, count, b1: float = 0.5,
+                   b2: float = 0.999, eps: float = 1e-8, bits: int = 8,
+                   block: int = 128, use_kernel: bool | None = None):
+    """Fused Adam step + uplink wire cast over (B, n) f32 params.  ``count``
+    is the PRE-increment step counter (``opt_state["count"]``); the bias
+    corrections are computed here exactly as ``optim.Adam.update`` does.
+    Returns (new_params (B, n), new_mu, new_nu, codes int8 (B, Np),
+    scales f16 (B, Np // block)) — codes/scales keep the kernel's padded
+    lanes, like ``qpack.ops.quantize_blocks``."""
+    _check(bits, block)
+    kern = _use_kernel_default() if use_kernel is None else use_kernel
+    qmax = 2 ** (bits - 1) - 1
+    c = (count + 1).astype(jnp.float32)
+    hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
+                       1.0 - b1 ** c, 1.0 - b2 ** c]).reshape(1, 3)
+    B, n = params.shape
+    pad = (-n) % block
+    if pad:
+        params, grads, mu, nu = (jnp.pad(a, ((0, 0), (0, pad)))
+                                 for a in (params, grads, mu, nu))
+    if kern:
+        # [:5] drops the interpret-mode pinning outputs OUTSIDE the kernel's
+        # jit boundary (see kernel.adam_sync_flat)
+        p2, mu2, nu2, q, s = kernel.adam_sync_flat(
+            hyper, params, grads, mu, nu, b1=b1, b2=b2, eps=eps, qmax=qmax,
+            block=block, interpret=_interpret())[:5]
+    else:
+        p2, mu2, nu2, q, s = ref.adam_sync_flat_ref(
+            hyper, params, grads, mu, nu, b1=b1, b2=b2, eps=eps, qmax=qmax,
+            block=block)
+    return p2[:, :n], mu2[:, :n], nu2[:, :n], q, s
+
+
+def adam_sync_tree(params, grads, opt_state, *, lr, b1: float = 0.5,
+                   b2: float = 0.999, eps: float = 1e-8, bits: int = 8,
+                   block: int = 128, use_kernel: bool | None = None):
+    """Tree form: bucket every (B, ...) leaf into one (B, N_flat) buffer
+    and run ONE fused Adam+quantize pass.  Returns (new_params,
+    new_opt_state, codes, scales) — trees mirror the inputs; codes/scales
+    are the uplink wire image of the bucketed stream."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    mu_leaves = jax.tree_util.tree_leaves(opt_state["mu"])
+    nu_leaves = jax.tree_util.tree_leaves(opt_state["nu"])
+    B = leaves[0].shape[0]
+    p, spans = _bucket(leaves, B, block)
+    g, _ = _bucket(g_leaves, B, block)
+    mu, _ = _bucket(mu_leaves, B, block)
+    nu, _ = _bucket(nu_leaves, B, block)
+    p2, mu2, nu2, q, s = adam_sync_flat(p, g, mu, nu, lr=lr,
+                                        count=opt_state["count"], b1=b1,
+                                        b2=b2, eps=eps, bits=bits,
+                                        block=block, use_kernel=use_kernel)
+    unflat = jax.tree_util.tree_unflatten
+
+    def split(flat):
+        return unflat(treedef, [flat[:, off:off + n].reshape(x.shape)
+                                for x, (off, n) in zip(leaves, spans)])
+
+    new_state = {"count": opt_state["count"] + 1,
+                 "mu": split(mu2), "nu": split(nu2)}
+    return split(p2), new_state, q, s

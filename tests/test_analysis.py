@@ -361,6 +361,19 @@ def test_wire_matrix_full_strategy_by_codec(tmp_path):
             assert (name, codec) in cells, (name, codec)
     assert cells[("fedgan", "bf16")]["status"] == "ok"
 
+    # the int8/int4 cells audit the FUSED pipeline (coded_sync auto-fuses
+    # when the codec has a fused_sync_spec); fedgan's explicit *_composed
+    # cells keep the per-leaf composed pipeline audited, and both variants
+    # must bill identically — the fusion changes dispatch structure, never
+    # the §3.2 budget
+    for codec in ("int8", "int4"):
+        fused_cell = cells[("fedgan", codec)]
+        comp_cell = cells[("fedgan", f"{codec}_composed")]
+        assert fused_cell["status"] == "ok", fused_cell
+        assert comp_cell["status"] == "ok", comp_cell
+        assert fused_cell["billed"] == comp_cell["billed"], \
+            (fused_cell, comp_cell)
+
     # strategies without a codec field REFUSE the codec cells loudly
     for name in ("local_only", "distributed"):
         for codec in ("int8", "int4"):
