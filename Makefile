@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint analyze bench bench-dryrun bench-serve \
+.PHONY: test test-fast determinism-gate lint analyze bench bench-dryrun bench-serve \
         bench-rounds bench-comm bench-privacy bench-agents bench-roofline \
         sweep sweep-comm sweep-privacy docs-check quickstart serve-example \
         strategies-parity
@@ -11,9 +11,19 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 test:
 	$(PY) -m pytest -x -q
 
-# Everything except the slow subprocess lower+compile checks.
+# Everything except tests carrying the `slow` marker (pytest.ini): the
+# subprocess lower+compile checks.
 test-fast:
-	$(PY) -m pytest -x -q --ignore=tests/test_sharding_launch.py
+	$(PY) -m pytest -x -q -m "not slow"
+
+# Replay determinism: the seeded async straggler simulation must produce
+# byte-identical event journals (and the same final-params digest, which
+# is a journal field) across two runs.  cmp diffs the files raw.
+determinism-gate:
+	$(PY) -m repro.run.simclock --seed 7 --rounds 6 --out /tmp/det_a.jsonl
+	$(PY) -m repro.run.simclock --seed 7 --rounds 6 --out /tmp/det_b.jsonl
+	cmp /tmp/det_a.jsonl /tmp/det_b.jsonl
+	@echo "determinism gate: journals byte-identical"
 
 # No linter wheel ships in the container: byte-compile everything, verify
 # the public entry points import (catches syntax + import drift cheaply),

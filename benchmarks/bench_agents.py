@@ -127,9 +127,72 @@ def bench_virtual_overhead(*, fast: bool = False):
     return overhead
 
 
+def bench_async_stragglers(*, fast: bool = False):
+    """Buffered-async vs blocking-sync under injected stragglers.
+
+    The headline number is **virtual-time makespan**: the async schedule
+    (flush every ``buffer_goal`` arrivals) vs the modeled blocking
+    schedule (every round waits for its slowest cohort member) under the
+    *same* seeded latency model — fully deterministic, so CI gates the
+    speedup tightly.  Wall-clock for the async run is emitted as its own
+    row and gated only against the committed baseline with generous slack
+    (the 2-core CI host's clock drifts; determinism does not)."""
+    from repro.core.participation import ParticipationSchedule
+    from repro.launch.train import experiment_spec
+    from repro.run.async_agg import AsyncAggDriver, modeled_sync_makespan
+    from repro.run.simclock import LatencyModel
+    from repro.run.virtual import StragglerPolicy
+
+    n = 6 if fast else 16
+    samples = 64 if fast else 256
+    a_total, a_active = 16, 8
+    spec, _ = experiment_spec(
+        "mixed_gaussian", K=5, steps=n * 5, log_every=0,
+        a_total=a_total, a_active=a_active, samples_per_agent=samples)
+    fed, fleet = spec.build_fleet()
+    schedule = ParticipationSchedule(seed=spec.participation_seed)
+    latency = LatencyModel(base=1.0, jitter=0.5, straggler_frac=0.25,
+                           straggler_factor=8.0)
+    driver = AsyncAggDriver(
+        fed, fleet, n, log_every=0, schedule=schedule,
+        straggler=StragglerPolicy(mode="defer", decay=0.5, max_staleness=2),
+        buffer_goal=a_active // 2, latency=latency,
+        timeout=6.0, max_retries=2, backoff=2.0)
+    runs = _interleaved([driver], [spec.seed + 1])[0]
+    res = _median(runs, "total_s")
+    assert driver.n_traces == 1, driver.n_traces  # one (1,1) trace, warm
+
+    sync_makespan = modeled_sync_makespan(schedule, latency, n,
+                                          a_total, a_active)
+    speedup = sync_makespan / res.timings["makespan"]
+    common.emit(
+        "agents_async_makespan", 0.0,
+        f"async {res.timings['makespan']:.2f} vs blocking-sync "
+        f"{sync_makespan:.2f} virtual s ({speedup:.2f}x), "
+        f"{res.timings['timeouts']} timeouts, "
+        f"{res.timings['expired_deltas']} expired",
+        makespan=round(res.timings["makespan"], 4),
+        sync_makespan=round(sync_makespan, 4),
+        async_speedup=round(speedup, 3),
+        timeouts=res.timings["timeouts"], retries=res.timings["retries"],
+        gave_up=res.timings["gave_up"],
+        expired_deltas=res.timings["expired_deltas"],
+        merged_deltas=res.timings["merged_deltas"],
+        buffer_goal=a_active // 2, n_rounds=n,
+        a_total=a_total, a_active=a_active)
+    common.emit(
+        "agents_async_wallclock", 1e6 * res.timings["total_s"],
+        f"{res.timings['total_s'] * 1e3:.0f} ms wall for {n} flushes "
+        f"({res.timings['dispatches']} dispatches)",
+        total_s=round(res.timings["total_s"], 4),
+        dispatches=res.timings["dispatches"], n_rounds=n)
+    return speedup
+
+
 def main(*, fast: bool = False):
     bench_virtual_overhead(fast=fast)
     bench_fleet_scaling(fast=fast)
+    bench_async_stragglers(fast=fast)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,8 @@ from repro.analysis.findings import Finding, filter_suppressed
 HOST_SIDE_MODULES = (
     "core/convergence.py",    # Lemma-1/2 diagnostics: host loop over agents
     "run/evals.py",           # eval harness: deliberate device->host fetch
+    "run/simclock.py",        # virtual-clock simulator: pure host event math
+    "run/async_agg.py",       # async server loop: host event loop between jits
     "privacy/accountant.py",  # closed-form RDP accountant: pure host math
 )
 

@@ -45,6 +45,9 @@ _TEXT_TOKENS = (
     ("secure", "secure_agg"),
     ("subsampl", "subsampled"),
     ("robust", "robust"),
+    # matches "async" and "asynchronous" — the async-buffer refusal rows
+    # (docs/scaling.md) vs the check_async_mergeable guards
+    ("async", "async"),
 )
 
 

@@ -18,6 +18,12 @@ RNG state in the checkpoint beyond the seed and the round counter.
 Sampling is uniform without replacement by default; ``weights`` switches
 to probability-proportional-to-weight sampling via Efraimidis–Spirakis
 reservoir keys (top-m of ``log(u_i)/w_i``).
+
+The async runtime (``repro.run.async_agg``) adds a third consumer: the
+virtual-clock simulator needs per-dispatch *arrival-time* draws.  Those
+come from :meth:`ParticipationSchedule.arrival_uniforms` — the same
+``(seed, index)`` keying discipline, folded on a disjoint stream so
+cohort membership and arrival latency never share randomness.
 """
 from __future__ import annotations
 
@@ -26,6 +32,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# fold constant separating the arrival-time stream from the cohort-score
+# stream: cohort scores fold (seed, round); arrival draws fold
+# (seed, dispatch, _ARRIVAL_FOLD + salt).  Any value >= 2**20 keeps the
+# two uses of fold_in's second argument disjoint for realistic salts.
+_ARRIVAL_FOLD = 1 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +97,21 @@ class ParticipationSchedule:
         scores = np.asarray(self._scores(int(round_idx), n_total))  # analysis: allow(host-sync)
         top = np.argpartition(scores, n_total - m)[n_total - m:]
         return np.sort(top)
+
+    def arrival_uniforms(self, index: int, n: int, salt: int = 0) -> np.ndarray:
+        """Per-client uniforms in [0, 1) for arrival-time sampling.
+
+        ``index`` is the dispatch sequence number (the async server's
+        monotone dispatch counter — each dispatch gets fresh draws);
+        ``salt`` separates multiple draws per dispatch (jitter vs the
+        straggler coin, retry attempts).  Pure function of
+        ``(seed, index, salt)`` — the virtual-clock simulator's replay
+        guarantee rests on exactly this statelessness.  Disjoint from the
+        :meth:`cohort` score stream by the ``_ARRIVAL_FOLD`` offset."""
+        key = jax.random.fold_in(jax.random.key(self.seed), int(index))
+        key = jax.random.fold_in(key, _ARRIVAL_FOLD + int(salt))
+        # host-side simulator planning, never inside a traced round
+        return np.asarray(jax.random.uniform(key, (n,)))  # analysis: allow(host-sync)
 
     def mask(self, round_idx, grid: tuple[int, int], m: int):
         """(P, A) bool participation mask — the traced view of

@@ -336,6 +336,10 @@ class PartialSharing(FedAvgSync):
     name = "partial_sharing"
 
 
+# warn-once latch for the mask_seed deprecation shim (reset by tests)
+_MASK_SEED_WARNED = False
+
+
 @dataclasses.dataclass(frozen=True)
 class SubsampledFedAvg(FedAvgSync):
     """Partial participation: each round, ``ceil(fraction * B)`` agents are
@@ -355,7 +359,11 @@ class SubsampledFedAvg(FedAvgSync):
     name = "subsampled"
 
     def __post_init__(self):
-        if self.mask_seed is not None:
+        global _MASK_SEED_WARNED
+        if self.mask_seed is not None and not _MASK_SEED_WARNED:
+            # warn once per process: sweep configs construct hundreds of
+            # strategy instances and a per-instance warning drowns the log
+            _MASK_SEED_WARNED = True
             warnings.warn(
                 "SubsampledFedAvg(mask_seed=...) is deprecated: the "
                 "participation draw is owned by repro.core.participation."
@@ -537,6 +545,60 @@ class CoordinateMedianSync(FedAvgSync):
 
     def sync_reduce(self):
         return collectives.make_robust_reduce("median")
+
+
+def check_async_mergeable(strategy) -> None:
+    """Refuse strategies whose sync cannot ride the async buffered merge.
+
+    ``repro.run.async_agg`` applies staleness-weighted parameter *deltas*
+    (``theta_post - theta_dispatch``) as they arrive, so the server never
+    sees a synchronous cohort; anything whose aggregation is not a plain
+    weighted mean of the declared subtrees must refuse loudly here rather
+    than merge wrongly.  Each incoherent knob raises separately so the
+    ``repro.analysis`` refusal-matrix rule maps one docs row per guard
+    (docs/scaling.md has the async rows, docs/privacy.md the sync ones).
+    """
+    if isinstance(strategy, SubsampledFedAvg):
+        raise ValueError(
+            "subsampled participation draws its own per-round mask inside "
+            "the traced sync; under asynchronous buffering the server "
+            "already decides who contributes to each flush — drop "
+            "SubsampledFedAvg and pass the schedule to the async driver")
+    if getattr(strategy, "sync_reduce", None) is not None \
+            and strategy.sync_reduce() is not None:
+        raise ValueError(
+            "a robust reduce is an order statistic over one synchronous "
+            "cohort's values; an asynchronous buffer mixes deltas taken "
+            "against different server versions, which voids the breakdown "
+            "bound — run strategy='fedgan' or the per-round driver")
+    if getattr(strategy, "secure_agg", None) is not None:
+        raise ValueError(
+            "secure_agg= pairwise masks only cancel when every cohort "
+            "member's update is summed in one shot; an asynchronous "
+            "buffer flushes partial sums, leaving pads uncancelled — "
+            "drop secure_agg or use the per-round driver")
+    if getattr(strategy, "codec", None) is not None:
+        raise ValueError(
+            "codec= residual feedback assumes every agent decodes the "
+            "same aggregate each round; an asynchronous flush would "
+            "replay stale payloads against a moved server — drop the "
+            "codec for async runs")
+    if getattr(strategy, "sync_dtype", None) is not None:
+        raise ValueError(
+            "sync_dtype= casts the wire image of a synchronous average; "
+            "the asynchronous buffered merge applies host-side deltas and "
+            "has no wire cast point — drop sync_dtype for async runs")
+    if getattr(strategy, "average_opt_state", False):
+        raise ValueError(
+            "average_opt_state= needs one agent-stacked moment tensor to "
+            "average; under asynchronous buffering each client's moments "
+            "stay local between its own dispatches — drop it")
+    if type(strategy) not in (FedAvgSync, PartialSharing):
+        raise ValueError(
+            f"asynchronous buffered aggregation supports plain FedAvgSync/"
+            f"PartialSharing only; {strategy.name!r} schedules or "
+            f"transforms its aggregation in ways a delta buffer cannot "
+            f"replay — use the per-round driver for it")
 
 
 # ---------------------------------------------------------------------------

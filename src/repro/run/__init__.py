@@ -5,20 +5,29 @@
 from repro.run.driver import RoundDriver, RunResult, train
 from repro.run.evals import EvalSuite, eval_hook, evaluate, final_fd
 from repro.run.virtual import (ClientStore, StragglerPolicy,
-                               VirtualClientDriver, load_fleet_checkpoint)
+                               VirtualClientDriver, load_fleet_checkpoint,
+                               staleness_scale, staleness_weights)
 
 __all__ = [
-    "ClientStore", "EvalSuite", "RoundDriver", "RunResult",
+    "AsyncAggDriver", "ClientStore", "EvalSuite", "EventJournal",
+    "LatencyModel", "RoundDriver", "RunResult", "SimClock",
     "StragglerPolicy", "VirtualClientDriver", "eval_hook", "evaluate",
-    "final_fd", "load_fleet_checkpoint", "run_sweep", "summary_table",
-    "train",
+    "final_fd", "load_fleet_checkpoint", "modeled_sync_makespan",
+    "params_digest", "run_sweep", "staleness_scale", "staleness_weights",
+    "summary_table", "train",
 ]
 
 
 def __getattr__(name):
-    # lazy: keeps `python -m repro.run.experiments` free of the runpy
-    # double-import warning
+    # lazy: keeps `python -m repro.run.experiments` / `-m repro.run.simclock`
+    # free of the runpy double-import warning
     if name in ("run_sweep", "summary_table"):
         from repro.run import experiments
         return getattr(experiments, name)
+    if name in ("AsyncAggDriver", "modeled_sync_makespan"):
+        from repro.run import async_agg
+        return getattr(async_agg, name)
+    if name in ("EventJournal", "LatencyModel", "SimClock", "params_digest"):
+        from repro.run import simclock
+        return getattr(simclock, name)
     raise AttributeError(name)

@@ -1,0 +1,437 @@
+"""FedBuff-style async delta aggregation over the virtual-client runtime.
+
+PR 8's ``VirtualClientDriver`` still aggregates per round: the server
+blocks until the whole cohort reports.  This module converts that contract
+into an event-driven one (buffered async aggregation, arXiv 2106.06639):
+
+  * the server keeps ``cohort`` clients in flight; each dispatch trains a
+    *single* client from the current server parameters (the same jitted
+    ``FedGAN.round`` body, LocalOnly twin, compiled once for a ``(1, 1)``
+    grid) and its delta ``theta_post - theta_dispatch`` arrives after a
+    seeded simulated latency (:class:`repro.run.simclock.LatencyModel`);
+  * arrivals land in a bounded buffer; the moment ``buffer_goal`` deltas
+    are in, the flush merges them through one jitted staleness-weighted
+    sum — weights ``decay ** staleness`` from the existing
+    :class:`repro.run.virtual.StragglerPolicy`, normalized per flush
+    (``repro.run.virtual.staleness_weights``), deltas older than
+    ``max_staleness`` dropped at arrival and counted;
+  * slow clients stop blocking anyone: a dispatch whose latency exceeds
+    the timeout budget is retried with a fresh latency draw and an
+    exponentially backed-off budget (``timeout * backoff**attempt``),
+    then dropped loudly after ``max_retries``.
+
+Everything runs on the :class:`repro.run.simclock.SimClock` virtual
+clock, so a seeded run replays bit-exactly — event journal and final
+parameters — which is what ``tests/test_async_agg.py`` and the CI
+determinism gate hold.
+
+**Degenerate case**: with no latency model, no timeout, and
+``buffer_goal == cohort`` the schedule collapses to synchronous rounds,
+and the driver runs the actual fused per-round path
+(:class:`VirtualClientDriver`) — bit-identical to the dense
+``RoundDriver``, params, optimizer state and EF residuals included.  The
+buffered path supports plain FedAvg/PartialSharing only and refuses
+anything else loudly (``repro.core.strategies.check_async_mergeable``;
+docs/scaling.md has the refusal rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import strategies as sync_strategies
+from repro.core.participation import ParticipationSchedule
+from repro.data.federated import FleetRounds
+from repro.run.driver import RunResult
+from repro.run.simclock import (EventJournal, LatencyModel, SimClock,
+                                params_digest)
+from repro.run.virtual import (ClientStore, StragglerPolicy,
+                               VirtualClientDriver, staleness_weights)
+
+tmap = jax.tree_util.tree_map
+
+
+def modeled_sync_makespan(schedule: ParticipationSchedule,
+                          latency: LatencyModel, n_rounds: int,
+                          n_total: int, m: int) -> float:
+    """Virtual-time cost of the *blocking* per-round schedule under the
+    same latency model: every round waits for its slowest cohort member.
+    The async-vs-sync benchmark's deterministic baseline (dispatch keys
+    are the round index — a model of the sync driver, not a replay of the
+    async one)."""
+    t = 0.0
+    for r in range(n_rounds):
+        cohort = schedule.cohort(r, n_total, m)
+        t += max(latency.draw(schedule, r, int(c), n_total) for c in cohort)
+    return t
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One outstanding dispatch."""
+    client: int
+    seq: int            # global dispatch counter (keys batches + latency)
+    attempt: int        # retry attempt, 0-based
+    version: int        # server version the client trained from
+    delta: Any = None   # host numpy delta over the synced subtrees
+    metrics: Any = None
+    row: Any = None     # the client's post-training store row
+
+
+@dataclasses.dataclass
+class AsyncAggDriver:
+    """Event-driven buffered-async server over ``fleet.num_clients``
+    virtual clients, keeping ``fleet.cohort_size`` dispatches in flight.
+
+    ``n_rounds`` counts buffer *flushes* (server versions) — the async
+    analog of the per-round drivers' round count.  ``straggler`` supplies
+    the staleness algebra (``decay``, ``max_staleness``); its ``mode`` is
+    ignored here (there is no blocking to defer from).  ``latency=None``
+    with ``timeout=None`` and a full-cohort ``buffer_goal`` selects the
+    sync-equivalent fused path; anything else runs the buffered loop.
+    """
+
+    fed: Any
+    fleet: FleetRounds
+    n_rounds: int
+    schedule: ParticipationSchedule = ParticipationSchedule()
+    straggler: StragglerPolicy = StragglerPolicy(mode="defer")
+    buffer_goal: int | None = None     # None -> cohort size
+    latency: LatencyModel | None = None
+    timeout: float | None = None
+    max_retries: int = 2
+    backoff: float = 2.0
+    weighting: str = "uniform"
+    log_every: int = 1
+    verbose: bool = False
+
+    def __post_init__(self):
+        P, A = self.fed.cfg.agent_grid
+        if self.fleet.slot_grid != (P, A):
+            raise ValueError(f"fleet slot_grid {self.fleet.slot_grid} != "
+                             f"fed agent_grid {(P, A)}")
+        self.n_total = self.fleet.num_clients
+        self.cohort_size = self.fleet.cohort_size
+        self.schedule.validate(self.n_total)
+        self.straggler.validate()
+        if self.latency is not None:
+            self.latency.validate()
+        goal = self.cohort_size if self.buffer_goal is None else self.buffer_goal
+        if not 1 <= goal <= self.cohort_size:
+            raise ValueError(
+                f"buffer_goal {goal} must be in [1, cohort={self.cohort_size}]"
+                " — a goal above the in-flight count can never fill")
+        self._goal = int(goal)
+        if self.timeout is not None and self.timeout <= 0:
+            raise ValueError(f"timeout must be > 0, got {self.timeout}")
+        if self.backoff < 1.0:
+            raise ValueError(f"backoff must be >= 1, got {self.backoff}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.weighting not in ("uniform", "dataset"):
+            raise ValueError(f"weighting must be 'uniform' or 'dataset', "
+                             f"got {self.weighting!r}")
+        self.sync_equivalent = (self.latency is None and self.timeout is None
+                                and self._goal == self.cohort_size)
+        strat = self.fed.cfg.resolve_strategy()
+        if not self.sync_equivalent:
+            # the buffered merge is a weighted delta sum; refuse loudly
+            # anything whose sync that algebra cannot replay
+            sync_strategies.check_async_mergeable(strat)
+        self.journal = EventJournal()
+        self.clock = SimClock()
+        self.store: ClientStore | None = None
+        # memoized executables + trace counter (compile-once assertions)
+        self._local1_jit = None
+        self._flush_jit = None
+        self.n_traces = 0
+
+    # ------------------------------------------------------------------
+    # degenerate path: the fused synchronous rounds, plus a journal
+    # ------------------------------------------------------------------
+
+    def _run_sync_equivalent(self, rng) -> RunResult:
+        inner = VirtualClientDriver(self.fed, self.fleet, self.n_rounds,
+                                    schedule=self.schedule,
+                                    straggler=StragglerPolicy(),
+                                    weighting=self.weighting,
+                                    log_every=self.log_every,
+                                    verbose=self.verbose)
+        result = inner.run(rng)
+        self.store = inner.store
+        self.n_traces = inner.n_traces
+        # synthesize the event journal the buffered loop would have
+        # produced at zero latency: round r dispatches, arrives and
+        # flushes at t = r
+        for r in range(self.n_rounds):
+            cohort = [int(c) for c in self.schedule.cohort(
+                r, self.n_total, self.cohort_size)]
+            for c in cohort:
+                self.journal.append("dispatch", float(r), client=c,
+                                    seq=r * self.cohort_size + cohort.index(c),
+                                    attempt=0, version=r, latency=0.0)
+            for c in cohort:
+                self.journal.append("arrival", float(r), client=c,
+                                    version=r, staleness=0)
+            self.journal.append("flush", float(r), version=r,
+                                merged=len(cohort))
+        digest = params_digest(result.state["params"])
+        self.journal.append("end", float(self.n_rounds - 1),
+                            params_digest=digest)
+        timings = dict(result.timings)
+        timings.update(mode="sync_equivalent", makespan=0.0,
+                       flushes=self.n_rounds, buffer_goal=self._goal,
+                       timeouts=0, retries=0, gave_up=0,
+                       data_kind="async")
+        return RunResult(result.fed, result.state, result.history,
+                         result.evals, timings)
+
+    # ------------------------------------------------------------------
+    # buffered path: per-client training on a (1, 1) LocalOnly twin
+    # ------------------------------------------------------------------
+
+    def _local1(self):
+        if self._local1_jit is None:
+            cfg = dataclasses.replace(
+                self.fed.cfg, agent_grid=(1, 1),
+                strategy=sync_strategies.LocalOnly(), mode="",
+                sync_dtype=None, average_opt_state=False)
+            fed1 = dataclasses.replace(self.fed, cfg=cfg, weights=None)
+
+            def fn(st, b, s):
+                self.n_traces += 1
+                return fed1.round(st, b, s)
+
+            self._local1_jit = jax.jit(fn)
+        return self._local1_jit
+
+    def _flush_fn(self):
+        """One jitted merge per flush: ``theta += sum_i w_i * delta_i``
+        per synced subtree, over a fixed-size ``(goal, ...)`` delta stack
+        — compiled once, like the round executables."""
+        if self._flush_jit is None:
+            def fn(params, deltas, w):
+                return {k: tmap(lambda p, d: p + jnp.einsum(
+                    "b,b...->...", w.astype(d.dtype), d).astype(p.dtype),
+                    params[k], deltas[k]) for k in params}
+            self._flush_jit = jax.jit(fn)
+        return self._flush_jit
+
+    def _train(self, cid: int, seq: int, version: int):
+        """Train one client from the current server params: returns its
+        post-training store row, host delta over the synced subtrees, and
+        scalar metrics.  Batches are salted by global client id and keyed
+        by the dispatch sequence — replay-deterministic."""
+        row = self.store.row(cid)
+        params = dict(row["params"])
+        for k in self._subtrees:
+            params[k] = self._server[k]
+        lift = lambda t: tmap(lambda x: jnp.asarray(x)[None, None], t)
+        state1 = {"params": lift(params), "opt_g": lift(row["opt_g"]),
+                  "opt_d": lift(row["opt_d"]),
+                  "step": self._step0 + version * self.fed.cfg.sync_interval}
+        key = jax.random.fold_in(self._data_rng, seq)
+        b, s = self._fleet1.round_batches(key, [cid])
+        state1, metrics = self._local1()(state1, b, s)
+        # one host fetch per dispatch — the simulator is host-side by design
+        fetched = jax.device_get({  # analysis: allow(host-sync)
+            "state": {k: state1[k] for k in ("params", "opt_g", "opt_d")},
+            "metrics": tmap(jnp.mean, metrics)})
+        drop = lambda t: tmap(lambda x: x[0, 0], t)
+        row_post = {k: drop(fetched["state"][k])
+                    for k in ("params", "opt_g", "opt_d")}
+        delta = {k: tmap(np.subtract, row_post["params"][k], self._server[k])
+                 for k in self._subtrees}
+        metrics = {k: float(v) for k, v in fetched["metrics"].items()}
+        return row_post, delta, metrics
+
+    def _next_client(self):
+        """The next dispatchable client id from the schedule's wave
+        stream, skipping ids already in flight."""
+        scanned = 0
+        while True:
+            if self._wave_queue:
+                cid = self._wave_queue.pop(0)
+                if cid in self._in_flight_ids:
+                    self._stats["skipped_busy"] += 1
+                    scanned += 1
+                    if scanned > 4 * self.n_total + self.cohort_size:
+                        raise RuntimeError(
+                            "dispatch stream scan did not find a free "
+                            "client — in-flight bookkeeping is corrupt")
+                    continue
+                return cid
+            wave = self.schedule.cohort(self._wave, self.n_total,
+                                        self.cohort_size)
+            self._wave += 1
+            self._wave_queue = [int(c) for c in wave]
+
+    def _dispatch(self, cid: int, attempt: int) -> None:
+        seq = self._seq
+        self._seq += 1
+        self._in_flight_ids.add(cid)
+        lat = (self.latency or LatencyModel()).draw(
+            self.schedule, seq, cid, self.n_total, attempt)
+        t = self.clock.now
+        self._stats["dispatches"] += 1
+        self.journal.append("dispatch", t, client=cid, seq=seq,
+                            attempt=attempt, version=self._version,
+                            latency=lat)
+        budget = (None if self.timeout is None
+                  else self.timeout * self.backoff ** attempt)
+        if budget is not None and lat > budget:
+            # the reply will not make the budget: schedule the timeout
+            # instead of the (discarded) arrival — the retry restarts the
+            # client from whatever the server holds *then*
+            self.clock.push(t + budget, "timeout",
+                            _InFlight(cid, seq, attempt, self._version))
+            return
+        fl = _InFlight(cid, seq, attempt, self._version)
+        fl.row, fl.delta, fl.metrics = self._train(cid, seq, self._version)
+        self.clock.push(t + lat, "arrival", fl)
+
+    def _flush(self) -> None:
+        entries = sorted(self._buffer, key=lambda e: e.seq)
+        self._buffer = []
+        stal = [self._version - e.version for e in entries]
+        base = None
+        if self.weighting == "dataset":
+            base = self._sizes[[e.client for e in entries]]
+        w = staleness_weights(stal, self.straggler, base)
+        deltas = {k: tmap(lambda *xs: np.stack(xs),
+                          *[e.delta[k] for e in entries])
+                  for k in self._subtrees}
+        merged = self._flush_fn()(self._server_dev, deltas, jnp.asarray(w))
+        self._server_dev = merged
+        self._server = jax.device_get(merged)  # analysis: allow(host-sync)
+        self._stats["merged_deltas"] += len(entries)
+        self.journal.append(
+            "flush", self.clock.now, version=self._version,
+            merged=len(entries),
+            clients=[e.client for e in entries],
+            staleness=[int(s) for s in stal],
+            weights=[float(x) for x in w],
+            params_digest=params_digest(self._server))
+        self._history.append(
+            {k: float(np.mean([e.metrics[k] for e in entries]))
+             for k in entries[0].metrics})
+        self._version += 1
+        if self.verbose and self.log_every and \
+                (self._version % self.log_every == 0):
+            m = self._history[-1]
+            print(f"flush {self._version:4d}/{self.n_rounds} "
+                  f"t={self.clock.now:8.2f} "
+                  f"d_loss={m.get('d_loss', float('nan')):.4f} "
+                  f"g_loss={m.get('g_loss', float('nan')):.4f}", flush=True)
+
+    def _run_buffered(self, rng) -> RunResult:
+        t0 = time.perf_counter()
+        self._data_rng, init_rng = jax.random.split(rng)
+        self.store = ClientStore.from_fed(self.fed, init_rng, self.n_total)
+        strat = self.fed.cfg.resolve_strategy()
+        self._subtrees = tuple(strat.subtrees)
+        self._server = {k: tmap(np.copy, self.store.template["params"][k])
+                        for k in self._subtrees}
+        self._server_dev = jax.device_put(self._server)
+        tiny = self.fed.init_state(init_rng, agent_grid=(1, 1))
+        self._step0 = tiny["step"]
+        self._fleet1 = dataclasses.replace(self.fleet, slot_grid=(1, 1))
+        self._sizes = self.fleet.client_sizes().astype(np.float64)
+
+        self._history, self._buffer = [], []
+        self._version, self._seq, self._wave = 0, 0, 0
+        self._wave_queue: list[int] = []
+        self._in_flight_ids: set[int] = set()
+        self._stats = {"dispatches": 0, "merged_deltas": 0,
+                       "expired_deltas": 0, "timeouts": 0, "retries": 0,
+                       "gave_up": 0, "skipped_busy": 0}
+        # a full fleet cycle of consecutive give-ups with zero arrivals
+        # means no reply can ever make the budget — refuse, don't spin
+        consecutive_gave_up = 0
+
+        for _ in range(self.cohort_size):
+            self._dispatch(self._next_client(), attempt=0)
+
+        while self._version < self.n_rounds:
+            if not len(self.clock):
+                raise RuntimeError("event queue drained before the flush "
+                                   "target — dispatch bookkeeping is corrupt")
+            t, kind, fl = self.clock.pop()
+            if kind == "timeout":
+                self._in_flight_ids.discard(fl.client)
+                self._stats["timeouts"] += 1
+                self.journal.append("timeout", t, client=fl.client,
+                                    seq=fl.seq, attempt=fl.attempt)
+                if fl.attempt + 1 <= self.max_retries:
+                    self._stats["retries"] += 1
+                    self.journal.append("retry", t, client=fl.client,
+                                        attempt=fl.attempt + 1)
+                    self._dispatch(fl.client, fl.attempt + 1)
+                else:
+                    self._stats["gave_up"] += 1
+                    consecutive_gave_up += 1
+                    self.journal.append("gave_up", t, client=fl.client,
+                                        attempts=fl.attempt + 1)
+                    if consecutive_gave_up >= self.n_total:
+                        raise ValueError(
+                            f"async run starved: {consecutive_gave_up} "
+                            "consecutive dispatches exhausted their retry "
+                            "budgets with no arrival — the timeout "
+                            f"({self.timeout}) is below every achievable "
+                            "latency; raise it, the backoff, or max_retries")
+                    self._dispatch(self._next_client(), attempt=0)
+                continue
+            # arrival
+            consecutive_gave_up = 0
+            self._in_flight_ids.discard(fl.client)
+            self.store.put(fl.client, fl.row)
+            staleness = self._version - fl.version
+            if staleness > self.straggler.max_staleness:
+                self._stats["expired_deltas"] += 1
+                self.journal.append("expired", t, client=fl.client,
+                                    seq=fl.seq, staleness=staleness)
+            else:
+                self._buffer.append(fl)
+                self.journal.append("arrival", t, client=fl.client,
+                                    seq=fl.seq, version=fl.version,
+                                    staleness=staleness)
+                if len(self._buffer) >= self._goal:
+                    self._flush()
+            if self._version < self.n_rounds:
+                self._dispatch(self._next_client(), attempt=0)
+
+        makespan = self.clock.now
+        self.journal.append("end", makespan, in_flight=len(self.clock),
+                            buffered=len(self._buffer),
+                            params_digest=params_digest(self._server))
+        total = time.perf_counter() - t0
+        timings = {
+            "total_s": total,
+            "rounds_per_s": self.n_rounds / max(total, 1e-9),
+            "makespan": makespan,
+            "flushes": self._version,
+            "buffer_goal": self._goal,
+            "mode": "buffered",
+            "data_kind": "async",
+            "a_total": self.n_total,
+            "a_active": self.cohort_size,
+            "store_rows": self.store.materialized,
+            **self._stats,
+        }
+        state = {"params": self._server, "version": self._version}
+        return RunResult(self.fed, state, self._history, [], timings)
+
+    # ------------------------------------------------------------------
+    def run(self, rng) -> RunResult:
+        # fresh journal/clock per run: re-running the same driver (bench
+        # warmup + timed repeats) must not accumulate events
+        self.journal = EventJournal()
+        self.clock = SimClock()
+        if self.sync_equivalent:
+            return self._run_sync_equivalent(rng)
+        return self._run_buffered(rng)

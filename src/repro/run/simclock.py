@@ -1,0 +1,251 @@
+"""Deterministic virtual-time simulation for the async runtime.
+
+Every scheduling decision the async server makes (``repro.run.async_agg``)
+is driven by *virtual* time, never the wall clock, so an async schedule is
+a pure function of its seeds and replays bit-exactly:
+
+  * :class:`SimClock` — a heapq event queue ordered by ``(time, seq)``;
+    the push sequence number breaks ties, so simultaneous events fire in
+    a deterministic order with no reliance on heap internals;
+  * :class:`LatencyModel` — client round-trip latency as a pure function
+    of ``(schedule.seed, dispatch_seq, client, attempt)``; the uniforms
+    come from ``ParticipationSchedule.arrival_uniforms`` so the cohort
+    draw and the latency draw share one seeding discipline but disjoint
+    streams;
+  * :class:`EventJournal` — an append-only record of every dispatch /
+    arrival / timeout / retry / flush, serialized canonically (sorted
+    keys, shortest-round-trip floats) so two runs of the same seed are
+    **byte-identical** — the CI determinism gate diffs the files raw.
+
+``python -m repro.run.simclock --seed 7 --out journal.jsonl`` runs a
+self-contained straggler simulation (a tiny quadratic GAN fleet) and
+writes the journal plus a final-params digest — run it twice, ``cmp`` the
+outputs: that is the whole gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import zlib
+from typing import Any
+
+import numpy as np
+
+from repro.core.participation import ParticipationSchedule
+
+
+class SimClock:
+    """Virtual-time event queue.  Events are ``(time, seq, kind, payload)``
+    tuples; ``seq`` is the push order, which makes pop order total and
+    deterministic even for equal-time events.  Time never flows backward:
+    pushing before ``now`` refuses (a scheduling bug, not a policy)."""
+
+    def __init__(self):
+        self._q: list = []
+        self._pushes = 0
+        self.now = 0.0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, at: float, kind: str, payload: Any = None) -> None:
+        at = float(at)
+        if at < self.now:
+            raise ValueError(f"cannot schedule {kind!r} at t={at} before "
+                             f"now={self.now}")
+        heapq.heappush(self._q, (at, self._pushes, kind, payload))
+        self._pushes += 1
+
+    def pop(self):
+        """Advance to and return the earliest event: ``(t, kind, payload)``."""
+        t, _, kind, payload = heapq.heappop(self._q)
+        self.now = t
+        return t, kind, payload
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Seeded client latency: ``base + jitter * U1``, multiplied by
+    ``straggler_factor`` when the straggler coin (``U2 < straggler_frac``)
+    lands.  Both uniforms are ``ParticipationSchedule.arrival_uniforms``
+    draws keyed by ``(schedule.seed, dispatch_seq, attempt)`` and indexed
+    by client id — a retry (``attempt > 0``) gets a *fresh* draw, which is
+    what makes retrying a straggler worthwhile."""
+
+    base: float = 1.0
+    jitter: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_factor: float = 10.0
+
+    def validate(self) -> None:
+        if self.base < 0 or self.jitter < 0:
+            raise ValueError(f"latency base/jitter must be >= 0, got "
+                             f"base={self.base} jitter={self.jitter}")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError(f"straggler_frac must be in [0, 1], got "
+                             f"{self.straggler_frac}")
+        if self.straggler_factor < 1.0:
+            raise ValueError(f"straggler_factor must be >= 1, got "
+                             f"{self.straggler_factor}")
+
+    def draw(self, schedule: ParticipationSchedule, dispatch_seq: int,
+             client: int, n_total: int, attempt: int = 0) -> float:
+        """Latency for one dispatch — a pure function of every argument."""
+        u1 = schedule.arrival_uniforms(dispatch_seq, n_total,
+                                       salt=2 * attempt)[client]
+        lat = self.base + self.jitter * float(u1)
+        if self.straggler_frac > 0.0:
+            u2 = schedule.arrival_uniforms(dispatch_seq, n_total,
+                                           salt=2 * attempt + 1)[client]
+            if float(u2) < self.straggler_frac:
+                lat *= self.straggler_factor
+        return float(lat)
+
+
+class EventJournal:
+    """Append-only event log with a canonical byte serialization.
+
+    Records are plain dicts; ``append`` stamps each with its index so the
+    journal is totally ordered by construction.  ``canonical_bytes``
+    serializes with sorted keys, no whitespace, and Python's
+    shortest-round-trip float repr — two runs producing the same events
+    produce the same *bytes*, which is the contract the determinism gate
+    (``make determinism-gate``) enforces with a raw file diff."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def append(self, ev: str, t: float, **fields) -> None:
+        rec = {"i": len(self.records), "ev": str(ev), "t": float(t)}
+        for k, v in fields.items():
+            if isinstance(v, (np.integer,)):
+                v = int(v)
+            elif isinstance(v, (np.floating,)):
+                v = float(v)
+            rec[k] = v
+        self.records.append(rec)
+
+    def select(self, ev: str) -> list[dict]:
+        return [r for r in self.records if r["ev"] == ev]
+
+    def counts(self) -> dict:
+        out: dict[str, int] = {}
+        for r in self.records:
+            out[r["ev"]] = out.get(r["ev"], 0) + 1
+        return out
+
+    def canonical_bytes(self) -> bytes:
+        lines = [json.dumps(r, sort_keys=True, separators=(",", ":"))
+                 for r in self.records]
+        return ("\n".join(lines) + "\n").encode("utf-8") if lines else b""
+
+    def write(self, path: str) -> None:
+        with open(path, "wb") as f:
+            f.write(self.canonical_bytes())
+
+
+def params_digest(tree) -> str:
+    """crc32 over every leaf's bytes in sorted-path order — a cheap,
+    deterministic fingerprint for journals and replay assertions."""
+    import jax
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    crc = 0
+    for path, leaf in sorted(leaves_with_paths, key=lambda kv: str(kv[0])):
+        arr = np.ascontiguousarray(leaf)  # analysis: allow(host-sync)
+        crc = zlib.crc32(str(path).encode(), crc)
+        crc = zlib.crc32(arr.tobytes(), crc)
+    return f"{crc:08x}"
+
+
+# ---------------------------------------------------------------------------
+# self-contained demo fleet + CLI (the determinism gate's workload)
+# ---------------------------------------------------------------------------
+
+
+def demo_driver(*, seed: int = 7, n_clients: int = 8, cohort: int = 4,
+                n_rounds: int = 6, buffer_goal: int = 2,
+                timeout: float | None = 6.0):
+    """A small quadratic-GAN async run with planted stragglers — the
+    workload behind ``python -m repro.run.simclock`` and the CI
+    determinism gate.  Everything is seeded from ``seed``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import FedGAN, FedGANConfig, GANTask
+    from repro.data.federated import FleetRounds
+    from repro.optim import SGD, constant, equal_timescale
+    from repro.run.async_agg import AsyncAggDriver
+    from repro.run.virtual import StragglerPolicy
+
+    def init(rng):
+        kg, kd = jax.random.split(rng)
+        return {"gen": {"theta": 0.1 * jax.random.normal(kg, (3,))},
+                "disc": {"w": 0.1 * jax.random.normal(kd, (3,))}}
+
+    def disc_loss(params, batch, rng):
+        xm = jnp.mean(batch["x"], axis=0)
+        g = jax.lax.stop_gradient(params["gen"]["theta"])
+        return (-jnp.dot(params["disc"]["w"], xm - g)
+                + 0.5 * jnp.sum(params["disc"]["w"] ** 2))
+
+    def gen_loss(params, batch, rng):
+        w = jax.lax.stop_gradient(params["disc"]["w"])
+        return jnp.dot(w, params["gen"]["theta"])
+
+    task = GANTask(init=init, disc_loss=disc_loss, gen_loss=gen_loss)
+    key = jax.random.key(seed)
+    data = [{"x": jax.random.normal(jax.random.fold_in(key, i), (32, 3)) + i}
+            for i in range(n_clients)]
+    grid = (1, cohort)
+    fed = FedGAN(task, FedGANConfig(agent_grid=grid, sync_interval=3),
+                 opt_g=SGD(), opt_d=SGD(),
+                 scales=equal_timescale(constant(0.05)))
+    fleet = FleetRounds(data, grid, batch_size=8, sync_interval=3)
+    return AsyncAggDriver(
+        fed, fleet, n_rounds,
+        schedule=ParticipationSchedule(seed=seed),
+        straggler=StragglerPolicy(mode="defer", decay=0.5, max_staleness=2),
+        buffer_goal=buffer_goal,
+        latency=LatencyModel(base=1.0, jitter=0.5, straggler_frac=0.25,
+                             straggler_factor=8.0),
+        timeout=timeout, max_retries=2, backoff=2.0)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser(
+        description="deterministic async-aggregation simulation; run twice "
+                    "with the same seed and diff the journals byte-for-byte")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--cohort", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--buffer-goal", type=int, default=2)
+    ap.add_argument("--timeout", type=float, default=6.0)
+    ap.add_argument("--out", default="", help="journal path (.jsonl)")
+    args = ap.parse_args(argv)
+
+    driver = demo_driver(seed=args.seed, n_clients=args.clients,
+                         cohort=args.cohort, n_rounds=args.rounds,
+                         buffer_goal=args.buffer_goal, timeout=args.timeout)
+    result = driver.run(jax.random.key(args.seed))
+    if args.out:
+        driver.journal.write(args.out)
+    digest = params_digest(result.state["params"])
+    counts = driver.journal.counts()
+    print(f"events={len(driver.journal)} flushes={counts.get('flush', 0)} "
+          f"timeouts={counts.get('timeout', 0)} "
+          f"makespan={result.timings['makespan']} params_digest={digest}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

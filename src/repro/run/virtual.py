@@ -178,6 +178,47 @@ class StragglerPolicy:
             raise ValueError(f"max_staleness must be >= 1, got {self.max_staleness}")
 
 
+def staleness_scale(staleness: int, policy: StragglerPolicy) -> float:
+    """The staleness discount for one delta: ``decay ** staleness``,
+    exactly zero past ``max_staleness`` (an expired delta never leaks a
+    sub-epsilon contribution).  Shared by the per-round deferred merge
+    (:meth:`VirtualClientDriver._fault_round`) and the async buffer
+    (``repro.run.async_agg``) so the two paths can never disagree on the
+    discount algebra."""
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if staleness > policy.max_staleness:
+        return 0.0
+    # pure host floats: policy fields are Python scalars, never traced
+    return float(policy.decay ** staleness)  # analysis: allow(host-sync)
+
+
+def staleness_weights(staleness, policy: StragglerPolicy,
+                      base=None) -> np.ndarray:
+    """Normalized merge weights for one async buffer flush.
+
+    ``staleness[i]`` is delta *i*'s age in server versions; ``base``
+    (optional, same length) carries the §3.1 dataset-size shares.  Raw
+    weight = ``base_i * decay**staleness_i`` (zero past ``max_staleness``),
+    normalized to sum to 1 over the surviving deltas — the invariants the
+    property suite in tests/test_async_agg.py holds.  All-expired buffers
+    normalize to all-zeros (the flush is then a no-op), never to NaN."""
+    s = [int(x) for x in staleness]
+    raw = np.array([staleness_scale(x, policy) for x in s], np.float64)
+    if base is not None:
+        b = np.asarray(base, np.float64)  # analysis: allow(host-sync)
+        if b.shape != raw.shape:
+            raise ValueError(f"base weights shape {b.shape} != "
+                             f"staleness shape {raw.shape}")
+        if not np.isfinite(b).all() or (b < 0).any():
+            raise ValueError("base weights must be finite and >= 0")
+        raw = raw * b
+    tot = raw.sum()
+    if tot > 0:
+        raw = raw / tot
+    return raw.astype(np.float32)
+
+
 def _pad_bucket(items):
     """Round a swap list up to the next power-of-two length by repeating
     its first element.  Duplicate gathers read the same row twice and
@@ -603,7 +644,7 @@ class VirtualClientDriver:
                 stats["expired_deltas"] += 1
                 continue
             stats["merged_deltas"] += 1
-            scale = w_share * self.straggler.decay ** staleness
+            scale = w_share * staleness_scale(staleness, self.straggler)
             for k in strat.subtrees:
                 extra[k] = tmap(lambda e, d: e + scale * d,
                                 extra[k], delta[k])

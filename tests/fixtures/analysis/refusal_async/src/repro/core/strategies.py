@@ -1,0 +1,15 @@
+"""Fixture: async-buffer refusal guards for the refusal-matrix rule.
+
+One guard per knob, mirroring ``check_async_mergeable``: the codec guard
+has a matching docs row (no finding), the sync_dtype guard is the
+planted code-side hole (docs row missing), and the docs table plants a
+robust+async row with no guard behind it.
+"""
+
+
+def check_async_mergeable(strategy):
+    if strategy.codec is not None:
+        raise ValueError("codec= residuals cannot ride an async buffer")
+    if strategy.sync_dtype is not None:
+        raise ValueError("sync_dtype= has no wire cast point under async "
+                         "buffering")

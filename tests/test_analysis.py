@@ -91,6 +91,24 @@ def test_refusal_matrix_both_directions_with_suppression():
     # the secure_agg+sync_dtype docs row carries the inline allow marker
 
 
+def test_refusal_matrix_async_rows():
+    """The async-buffer vocabulary ('async' + knob tokens): a guarded and
+    documented pair is silent; the planted undocumented sync_dtype guard
+    and the planted guard-less robust docs row are each one finding."""
+    root = os.path.join(FIX, "refusal_async")
+    findings = run_lint(ctx_for("refusal_async"), rules=["refusal-matrix"])
+    assert len(findings) == 2, findings
+    docs_hole = [f for f in findings if f.file == "docs/scaling.md"]
+    code_hole = [f for f in findings if f.file.endswith("strategies.py")]
+    assert len(docs_hole) == 1 and len(code_hole) == 1
+    assert "async + robust" in docs_hole[0].message
+    assert docs_hole[0].line == line_of(root, "docs/scaling.md",
+                                        "robust reduce + async")
+    assert "async + sync_dtype" in code_hole[0].message
+    assert code_hole[0].line == line_of(root, "src/repro/core/strategies.py",
+                                        "raise ValueError", nth=1)
+
+
 def test_catalogue_drift_stale_missing_and_suppressed():
     root = os.path.join(FIX, "catalogue")
     findings = run_lint(ctx_for("catalogue"), rules=["catalogue-drift"])

@@ -16,6 +16,10 @@ from repro.launch.hlo_analysis import CollectiveStats, collective_bytes
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# subprocess lower+compile checks dominate the suite's wall clock;
+# `make test-fast` excludes them via -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def test_batch_axes_context():
     assert current_batch_axes() == ("pod", "data")

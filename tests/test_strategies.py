@@ -215,7 +215,9 @@ def test_subsampled_mask_seed_shim_warns_and_matches_schedule():
     """The old ``mask_seed=`` knob is a deprecation shim over the shared
     ParticipationSchedule: it must warn loudly and produce the bit-exact
     trajectory of ``schedule=ParticipationSchedule(seed=...)``."""
+    from repro.core import strategies as strategies_mod
     from repro.core.participation import ParticipationSchedule
+    strategies_mod._MASK_SEED_WARNED = False   # re-arm the warn-once latch
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         legacy = SubsampledFedAvg(fraction=0.5, mask_seed=42)
@@ -232,6 +234,30 @@ def test_subsampled_mask_seed_shim_warns_and_matches_schedule():
     for a, b in zip(jax.tree_util.tree_leaves(old_state),
                     jax.tree_util.tree_leaves(new_state)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_subsampled_mask_seed_warns_exactly_once():
+    """Sweep configs construct hundreds of strategy instances; the shim
+    warns on the first one and stays silent after — a per-instance
+    warning would drown the log without adding information."""
+    from repro.core import strategies as strategies_mod
+    strategies_mod._MASK_SEED_WARNED = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        SubsampledFedAvg(fraction=0.5, mask_seed=42)
+        SubsampledFedAvg(fraction=0.5, mask_seed=43)
+        SubsampledFedAvg(fraction=0.25, mask_seed=42)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "mask_seed" in str(w.message)]
+    assert len(dep) == 1
+    # schedule-only construction never trips the latch
+    strategies_mod._MASK_SEED_WARNED = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        from repro.core.participation import ParticipationSchedule
+        SubsampledFedAvg(fraction=0.5,
+                         schedule=ParticipationSchedule(seed=42))
+    assert not any(issubclass(w.category, DeprecationWarning) for w in rec)
 
 
 def test_subsampled_mask_seed_and_schedule_conflict():

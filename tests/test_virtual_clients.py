@@ -112,12 +112,25 @@ def assert_trees_equal(a, b):
 # simulation parity: A_total == A_active + identity schedule == dense path
 # ---------------------------------------------------------------------------
 
+# strategy x codec grid: every aggregation family that can ride the fused
+# virtual path, each with and without a quantizing codec (+ error
+# feedback, the default) — codec state threading is where slot-paging
+# bugs would hide, so the grid is the parity surface, not a sample
+_PARITY_GRID = [
+    ("fedavg", lambda codec: FedAvgSync(codec=codec) if codec else None),
+    ("partial_sharing", lambda codec: PartialSharing(codec=codec)),
+    ("adaptive_k", lambda codec: strategies.AdaptiveK(warmup_rounds=2,
+                                                      sync_every=2,
+                                                      codec=codec)),
+]
 PARITY_STRATEGIES = [
-    ("fedavg", None),
-    ("partial_sharing", PartialSharing()),
+    (name if codec_name == "none" else f"{name}_{codec_name}",
+     make(codec_from_flags(codec_name) if codec_name != "none" else None))
+    for name, make in _PARITY_GRID
+    for codec_name in ("none", "int8")
+] + [
     ("subsampled", SubsampledFedAvg(fraction=0.5,
                                     schedule=ParticipationSchedule(seed=3))),
-    ("codec_ef", FedAvgSync(codec=codec_from_flags("int8"))),
 ]
 
 
